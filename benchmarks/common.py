@@ -1,0 +1,88 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Results are cached as JSON under experiments/sim/ keyed by a config hash, so
+``python -m benchmarks.run`` is incremental. Output convention (per repo
+contract): ``name,us_per_call,derived`` CSV rows on stdout.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import metrics as met
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+from repro.core.params import SimConfig
+
+EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+POLICIES = ("frfcfs", "atlas", "parbs", "tcm", "sms")
+
+
+def parity_config(n_cpu: int = 8, n_channels: int = 2, fifo_size: int = 6,
+                  dcs_size: int = 4, **kw) -> SimConfig:
+    """Centralized buffer sized to SMS entry parity (paper's comparison)."""
+    cfg = SimConfig(n_cpu=n_cpu, n_channels=n_channels, fifo_size=fifo_size,
+                    dcs_size=dcs_size, **kw)
+    entries = cfg.n_src * cfg.fifo_size + cfg.n_banks * cfg.dcs_size
+    return cfg.replace(buf_entries=entries)
+
+
+def _key(cfg: SimConfig, policy: str, tag: str, n_cycles: int,
+         warmup: int, seed: int, n_per_cat: int) -> str:
+    blob = json.dumps([repr(cfg), policy, tag, n_cycles, warmup, seed,
+                       n_per_cat], sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def run_policy(cfg: SimConfig, policy: str, workloads: Sequence[wl.Workload],
+               n_cycles: int = 16_000, warmup: int = 2_000, seed: int = 7,
+               tag: str = "", force: bool = False) -> Dict:
+    """Alone-normalized per-workload metrics for one policy (cached)."""
+    key = _key(cfg, policy, tag or "std", n_cycles, warmup, seed,
+               len(workloads))
+    path = EXP_DIR / f"{policy}_{key}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+    t0 = time.time()
+    apool, aactive, amap = wl.alone_batch(cfg)
+    am = sim.simulate(cfg, policy, apool, aactive, n_cycles, warmup)
+    alone = wl.alone_perf_lookup(cfg, am, amap)
+    pool, active = wl.pool_batch(cfg, workloads)
+    m = sim.simulate(cfg, policy, pool, active, n_cycles, warmup)
+    perf = sim.perf_vector(cfg, m, pool)
+    rows = [met.workload_metrics(cfg, w, perf[i], alone)
+            for i, w in enumerate(workloads)]
+    out = {
+        "policy": policy,
+        "elapsed_s": round(time.time() - t0, 1),
+        "alone": alone,
+        "rows": rows,
+        "categories": [w.category for w in workloads],
+        "agg": met.aggregate(rows),
+        "by_category": met.by_category(workloads, rows),
+        "measured": {k: np.asarray(v).mean(0).tolist()
+                     for k, v in m.items()},
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def fmt_cat_table(results: Dict[str, Dict], metric: str) -> str:
+    cats = list(wl.CATEGORIES)
+    lines = ["policy," + ",".join(cats) + ",avg"]
+    for pol, res in results.items():
+        vals = [res["by_category"].get(c, {}).get(metric, float("nan"))
+                for c in cats]
+        lines.append(pol + "," + ",".join(f"{v:.3f}" for v in vals) +
+                     f",{res['agg'][metric]:.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,35 @@
+"""Fig 4: system performance (weighted speedup) + fairness (max slowdown)
+across the 7 workload categories, 105 workloads, 5 schedulers."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import workloads as wl
+
+
+def main(n_per_cat: int = 15, n_cycles: int = 16_000, force: bool = False):
+    cfg = common.parity_config()
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+    results = {}
+    t0 = time.time()
+    for pol in common.POLICIES:
+        results[pol] = common.run_policy(cfg, pol, wls, n_cycles=n_cycles,
+                                         tag="fig4", force=force)
+    us = (time.time() - t0) * 1e6 / max(len(wls) * len(common.POLICIES), 1)
+
+    print("# Fig 4a — weighted speedup by category")
+    print(common.fmt_cat_table(results, "weighted_speedup"))
+    print("# Fig 4b — max slowdown by category (lower is better)")
+    print(common.fmt_cat_table(results, "max_slowdown"))
+    sms, tcm = results["sms"]["agg"], results["tcm"]["agg"]
+    ws_gain = 100.0 * (sms["weighted_speedup"] / tcm["weighted_speedup"] - 1)
+    fair_gain = tcm["max_slowdown"] / sms["max_slowdown"]
+    common.emit("fig4_sms_vs_tcm", us,
+                f"ws_gain_pct={ws_gain:.1f};fairness_x={fair_gain:.2f};"
+                f"paper=+41.2%/4.8x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

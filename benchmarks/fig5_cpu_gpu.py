@@ -1,0 +1,35 @@
+"""Fig 5: CPU weighted speedup and GPU speedup, separately, by category."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import workloads as wl
+
+
+def main(n_per_cat: int = 15, n_cycles: int = 16_000, force: bool = False):
+    cfg = common.parity_config()
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+    results = {}
+    t0 = time.time()
+    for pol in common.POLICIES:
+        results[pol] = common.run_policy(cfg, pol, wls, n_cycles=n_cycles,
+                                         tag="fig4", force=force)
+    us = (time.time() - t0) * 1e6 / max(len(wls) * len(common.POLICIES), 1)
+
+    print("# Fig 5a — CPU weighted speedup by category")
+    print(common.fmt_cat_table(results, "cpu_weighted_speedup"))
+    print("# Fig 5b — GPU speedup by category")
+    print(common.fmt_cat_table(results, "gpu_speedup"))
+    sms, tcm = results["sms"]["agg"], results["tcm"]["agg"]
+    fr = results["frfcfs"]["agg"]
+    cpu_x = sms["cpu_weighted_speedup"] / tcm["cpu_weighted_speedup"]
+    gpu_vs_fr = sms["gpu_speedup"] / max(fr["gpu_speedup"], 1e-9)
+    common.emit("fig5_cpu_gpu", us,
+                f"sms_cpu_vs_tcm_x={cpu_x:.2f};sms_gpu_vs_frfcfs_x="
+                f"{gpu_vs_fr:.2f};paper=1.76x/~1.0x")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig 6: SMS vs TCM as the number of CPU cores scales (memory pressure)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import workloads as wl
+
+CORE_COUNTS = (4, 8, 12, 16)
+HI_CATS = ("HL", "HML", "HM", "H")
+
+
+def main(n_per_cat: int = 7, n_cycles: int = 12_000, force: bool = False):
+    t0 = time.time()
+    print("# Fig 6 — SMS vs TCM, core scaling "
+          "(WS gain % / fairness x, high-intensity workloads)")
+    print("n_cpu,tcm_ws,sms_ws,ws_gain_pct,tcm_maxsd,sms_maxsd,fairness_x")
+    rows = []
+    for n_cpu in CORE_COUNTS:
+        cfg = common.parity_config(n_cpu=n_cpu, n_channels=4)  # paper: 4 MCs
+        wls = [w for w in wl.make_workloads(n_cpu, n_per_cat=n_per_cat)
+               if w.category in HI_CATS]
+        res = {p: common.run_policy(cfg, p, wls, n_cycles=n_cycles,
+                                    tag=f"fig6_c{n_cpu}", force=force)
+               for p in ("tcm", "sms")}
+        t, s = res["tcm"]["agg"], res["sms"]["agg"]
+        gain = 100 * (s["weighted_speedup"] / t["weighted_speedup"] - 1)
+        fx = t["max_slowdown"] / s["max_slowdown"]
+        print(f"{n_cpu},{t['weighted_speedup']:.3f},{s['weighted_speedup']:.3f},"
+              f"{gain:.1f},{t['max_slowdown']:.2f},{s['max_slowdown']:.2f},"
+              f"{fx:.2f}")
+        rows.append((n_cpu, gain, fx))
+    us = (time.time() - t0) * 1e6 / max(len(CORE_COUNTS), 1)
+    trend = "increasing" if rows[-1][1] >= rows[0][1] else "flat"
+    common.emit("fig6_core_scaling", us,
+                f"gain_4c={rows[0][1]:.1f}%;gain_16c={rows[-1][1]:.1f}%;"
+                f"trend={trend};paper=gains_grow_with_cores")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

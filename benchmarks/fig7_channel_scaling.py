@@ -1,0 +1,42 @@
+"""Fig 7: SMS vs TCM as memory channels scale (1..8)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.core import workloads as wl
+
+CHANNELS = (1, 2, 4, 8)
+HI_CATS = ("HL", "HML", "HM", "H")
+
+
+def main(n_per_cat: int = 7, n_cycles: int = 12_000, force: bool = False):
+    t0 = time.time()
+    print("# Fig 7 — SMS vs TCM, channel scaling (high-intensity workloads)")
+    print("channels,tcm_ws,sms_ws,ws_gain_pct,tcm_maxsd,sms_maxsd,fairness_x")
+    rows = []
+    for nc in CHANNELS:
+        cfg = common.parity_config(n_channels=nc)
+        wls = [w for w in wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+               if w.category in HI_CATS]
+        res = {p: common.run_policy(cfg, p, wls, n_cycles=n_cycles,
+                                    tag=f"fig7_ch{nc}", force=force)
+               for p in ("tcm", "sms")}
+        t, s = res["tcm"]["agg"], res["sms"]["agg"]
+        gain = 100 * (s["weighted_speedup"] / t["weighted_speedup"] - 1)
+        fx = t["max_slowdown"] / s["max_slowdown"]
+        print(f"{nc},{t['weighted_speedup']:.3f},{s['weighted_speedup']:.3f},"
+              f"{gain:.1f},{t['max_slowdown']:.2f},{s['max_slowdown']:.2f},"
+              f"{fx:.2f}")
+        rows.append((nc, gain, s["weighted_speedup"], t["weighted_speedup"]))
+    us = (time.time() - t0) * 1e6 / max(len(CHANNELS), 1)
+    sms_scale = rows[-1][2] / max(rows[0][2], 1e-9)
+    tcm_scale = rows[-1][3] / max(rows[0][3], 1e-9)
+    common.emit("fig7_channel_scaling", us,
+                f"sms_8ch_vs_1ch_x={sms_scale:.2f};tcm_8ch_vs_1ch_x="
+                f"{tcm_scale:.2f};paper=sms_scales_better")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

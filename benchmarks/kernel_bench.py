@@ -1,0 +1,112 @@
+"""Kernel benches: allclose status + arithmetic-intensity accounting.
+
+This container is CPU-only: Pallas executes in interpret mode, so wall-times
+are NOT TPU times. What we report per kernel: correctness vs oracle across a
+shape sweep, plus the analytic FLOPs/bytes per call and the implied TPU-v5e
+time bound (the kernel-level roofline the BlockSpec tiling targets).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def bench_flash():
+    rows = []
+    for (B, Hq, Hkv, S, d) in [(1, 8, 8, 1024, 128), (1, 16, 4, 2048, 128),
+                               (2, 8, 2, 512, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, Hq, S, d), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Hkv, S, d), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Hkv, S, d), jnp.float32)
+        t0 = time.time()
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        dt = time.time() - t0
+        ref = attention_ref(q, k, v, causal=True)
+        err = float(jnp.abs(out - ref).max())
+        flops = 4 * B * Hq * S * S * d * 0.5          # causal half
+        bytes_ = 2 * (q.size + k.size + v.size + out.size)  # bf16 deploy
+        tpu_bound = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+        rows.append((f"flash B{B}H{Hq}/{Hkv}S{S}d{d}", err, flops, bytes_,
+                     tpu_bound, dt))
+    return rows
+
+
+def bench_paged():
+    rows = []
+    for (B, Hq, Hkv, d, page, n_slots, P) in [(8, 8, 2, 128, 64, 8, 128),
+                                              (32, 4, 4, 64, 16, 16, 1024)]:
+        rng = np.random.RandomState(0)
+        lengths = jnp.asarray(rng.randint(page, page * n_slots + 1, (B,)),
+                              jnp.int32)
+        pt = jnp.asarray(rng.randint(0, P, (B, n_slots)), jnp.int32)
+        q = jnp.asarray(rng.randn(B, Hq, d), jnp.float32)
+        kp = jnp.asarray(rng.randn(P, Hkv, page, d), jnp.float32)
+        vp = jnp.asarray(rng.randn(P, Hkv, page, d), jnp.float32)
+        t0 = time.time()
+        out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+        dt = time.time() - t0
+        ref = paged_attention_ref(q, kp, vp, pt, lengths)
+        err = float(jnp.abs(out - ref).max())
+        toks = int(np.asarray(lengths).sum())
+        flops = 4 * Hq * d * toks
+        bytes_ = 2 * 2 * Hkv * d * toks               # read K+V bf16
+        tpu_bound = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+        rows.append((f"paged B{B}H{Hq}/{Hkv}d{d}p{page}", err, flops, bytes_,
+                     tpu_bound, dt))
+    return rows
+
+
+def bench_mlstm():
+    from repro.kernels.mlstm_scan.kernel import mlstm_scan
+    from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+    rows = []
+    for (B, H, S, dh, chunk) in [(2, 4, 512, 96, 128), (1, 4, 1024, 64, 256)]:
+        rng = np.random.RandomState(0)
+        q, k, v = (jnp.asarray(rng.randn(B, H, S, dh), jnp.float32)
+                   for _ in range(3))
+        lf = jnp.asarray(np.log(rng.uniform(0.5, 0.99, (B, H, S))),
+                         jnp.float32)
+        li = jnp.asarray(rng.randn(B, H, S) * 0.5, jnp.float32)
+        t0 = time.time()
+        out = mlstm_scan(q, k, v, lf, li, chunk=chunk, interpret=True)
+        dt = time.time() - t0
+        ref = mlstm_scan_ref(q, k, v, lf, li, chunk=chunk)
+        err = float(jnp.abs(out - ref).max())
+        flops = 4 * B * H * S * chunk * dh + 2 * B * H * S * dh * dh
+        bytes_ = 2 * 4 * B * H * S * dh
+        tpu_bound = max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
+        rows.append((f"mlstm B{B}H{H}S{S}dh{dh}c{chunk}", err, flops,
+                     bytes_, tpu_bound, dt))
+    return rows
+
+
+def main():
+    t0 = time.time()
+    print("# Kernel correctness + TPU-v5e roofline bounds "
+          "(interpret-mode check; wall-times are NOT TPU times)")
+    print("kernel,max_err,gflops_call,mbytes_call,tpu_bound_us,interp_s")
+    worst = 0.0
+    for name, err, flops, bytes_, bound, dt in (bench_flash() +
+                                                bench_paged() +
+                                                bench_mlstm()):
+        worst = max(worst, err)
+        print(f"{name},{err:.2e},{flops / 1e9:.2f},{bytes_ / 1e6:.2f},"
+              f"{bound * 1e6:.1f},{dt:.2f}")
+    us = (time.time() - t0) * 1e6 / 7
+    common.emit("kernel_bench", us, f"max_err={worst:.2e};status="
+                f"{'pass' if worst < 1e-3 else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""§Roofline: the full (arch x shape) table from the dry-run artifacts.
+
+Reads experiments/dryrun/*.json (single-pod baselines; the multi-pod pass is
+a compile-proof, not a roofline source) and prints, per cell:
+  three roofline terms (s), dominant bottleneck, MODEL_FLOPS, useful-flops
+  ratio, and one-line "what would move the dominant term".
+Calibrated numbers (per-layer extrapolation of unrolled variants) are used —
+raw scanned-HLO numbers undercount loop bodies (see repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from benchmarks import common
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+_ADVICE = {
+    ("compute",): "raise arithmetic efficiency: fused/flash attention kernel,"
+                  " drop causal-masked waste, reduce remat recompute",
+    ("memory",): "cut bytes: fuse elementwise chains (TPU does), bf16 "
+                 "activations, grouped-KV decode reads, smaller remat policy",
+    ("collective",): "cut collective bytes: ZeRO-1 reduce-scatter, overlap "
+                     "grad all-reduce with backward, shard more params",
+}
+
+
+def load_cells(mesh: str = "single_pod", tag: str = ""):
+    cells = []
+    suffix = f"__{mesh}" + (f"__{tag}" if tag else "") + ".json"
+    for p in sorted(DRYRUN.glob(f"*{suffix}")):
+        if p.name.count("__") != suffix.count("__") + 1:
+            continue  # skip tagged variants when untagged requested
+        rec = json.loads(p.read_text())
+        cells.append(rec)
+    return cells
+
+
+def main():
+    t0 = time.time()
+    cells = load_cells("single_pod")
+    ok = [c for c in cells if "error" not in c]
+    print("# Roofline table — single-pod (16,16)=256 chips, per-chip terms")
+    print("arch,shape,kind,compute_s,memory_s,collective_s,bottleneck,"
+          "model_gflops_chip,useful_flops_ratio,roofline_fraction")
+    n_bound = {"compute": 0, "memory": 0, "collective": 0}
+    for c in ok:
+        cal = c.get("calibrated", {})
+        r = cal.get("roofline", c["roofline"])
+        ufr = cal.get("useful_flops_ratio") or 0.0
+        n_bound[r["bottleneck"]] += 1
+        print(f"{c['arch']},{c['shape']},{c['kind']},"
+              f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e},{r['bottleneck']},"
+              f"{c['model_flops_per_chip'] / 1e9:.1f},"
+              f"{ufr:.3f},{r['roofline_fraction']:.3f}")
+    multi = [c for c in load_cells("multi_pod") if "error" not in c]
+    us = (time.time() - t0) * 1e6 / max(len(ok), 1)
+    common.emit(
+        "roofline_table", us,
+        f"cells_ok={len(ok)};multi_pod_ok={len(multi)};"
+        f"bound_compute={n_bound['compute']};bound_memory={n_bound['memory']};"
+        f"bound_collective={n_bound['collective']}")
+    for b, adv in _ADVICE.items():
+        print(f"# advice[{b[0]}]: {adv}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

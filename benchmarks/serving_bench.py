@@ -1,0 +1,48 @@
+"""Serving-domain SMS benchmark (beyond-paper adaptation).
+
+Heterogeneous clients — 4 interactive (CPU-analogue) + 1 bulk tenant with
+deep queues and shared-prefix locality (GPU-analogue) — share one
+continuous-batching engine. Compares FCFS, locality-first (FR-FCFS
+analogue), and SMS staged scheduling on throughput and per-client slowdown.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.serving.engine import EngineConfig, fairness_report
+from repro.serving.types import default_clients
+
+POLICIES = ("fcfs", "locality", "sms")
+
+
+def main(quick: bool = False):
+    horizon = 2_000.0 if quick else 6_000.0
+    t0 = time.time()
+    clients = default_clients()
+    results = {}
+    print("# Serving: per-client slowdown vs isolated run (lower is better)")
+    print("policy,max_slowdown,total_tok_s," +
+          ",".join(c.name for c in clients))
+    for pol in POLICIES:
+        r = fairness_report(pol, clients, horizon_ms=horizon,
+                            engine_cfg=EngineConfig())
+        results[pol] = r
+        sd = [r["slowdowns"].get(c.name, float("nan")) for c in clients]
+        print(f"{pol},{r['max_slowdown']:.2f},{r['total_tok_s']:.0f}," +
+              ",".join(f"{s:.2f}" for s in sd))
+    us = (time.time() - t0) * 1e6 / len(POLICIES)
+    fx_fcfs = results["fcfs"]["max_slowdown"] / results["sms"]["max_slowdown"]
+    fx_loc = results["locality"]["max_slowdown"] / \
+        results["sms"]["max_slowdown"]
+    thr = results["sms"]["total_tok_s"] / max(
+        results["locality"]["total_tok_s"], 1e-9)
+    common.emit("serving_sms", us,
+                f"fairness_vs_fcfs_x={fx_fcfs:.1f};"
+                f"fairness_vs_locality_x={fx_loc:.1f};"
+                f"throughput_ratio={thr:.3f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Shared simulator machinery: source/core models, DRAM state, completion.
+
+Everything is expressed as fixed-shape masked array ops so the per-cycle step
+jits into one `lax.scan` body and `vmap`s over workloads.
+
+Shapes (per workload): S = n_src sources, C = channels, B = banks/channel.
+Completion ring: RING > max access latency, indexed by absolute cycle % RING.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import SimConfig, SourcePool
+
+RING = 64
+NEG_T = -100_000
+
+
+# ---------------------------------------------------------------------------
+# cheap counter RNG (threefry is too heavy inside a per-cycle scan)
+# ---------------------------------------------------------------------------
+
+def lcg_step(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: uint32 state. Returns (new_state, u01 float32)."""
+    x = x * jnp.uint32(1664525) + jnp.uint32(1013904223)
+    u = (x >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+    return x, u
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def source_state(cfg: SimConfig) -> Dict[str, Any]:
+    S = cfg.n_src
+    z_i = jnp.zeros((S,), jnp.int32)
+    z_f = jnp.zeros((S,), jnp.float32)
+    return {
+        "insts_acc": z_f, "insts_done": z_f,
+        "outstanding": z_i, "emitted": z_i, "completed": z_i,
+        "sum_lat": z_f,
+        "pend_valid": jnp.zeros((S,), bool),
+        "pend_bank": z_i, "pend_row": z_i, "pend_birth": z_i,
+        "cur_bank": z_i, "cur_row": z_i, "bank_ptr": z_i,
+        "rng": (jnp.arange(S, dtype=jnp.uint32) * jnp.uint32(2654435761)
+                + jnp.uint32(12345)),
+        # measurement helpers (Fig 1): bank occupancy snapshots
+        "blp_sum": z_f, "blp_n": z_f,
+        # SMS-DASH deadline accounting
+        "period_done": z_i, "dl_met": z_i, "dl_missed": z_i,
+    }
+
+
+def dram_state(cfg: SimConfig) -> Dict[str, Any]:
+    C, B = cfg.n_channels, cfg.n_banks
+    return {
+        "bank_free": jnp.zeros((C, B), jnp.int32),
+        "open_row": jnp.full((C, B), -1, jnp.int32),
+        "open_valid": jnp.zeros((C, B), bool),
+        "act_ring": jnp.full((C, 4), NEG_T, jnp.int32),
+        "bus_free": jnp.zeros((C,), jnp.int32),
+        "ring": jnp.zeros((RING, cfg.n_src), jnp.int32),
+        # measured service stats
+        "hits": jnp.zeros((cfg.n_src,), jnp.int32),
+        "issued": jnp.zeros((cfg.n_src,), jnp.int32),
+    }
+
+
+def pool_arrays(pool: SourcePool) -> Dict[str, jax.Array]:
+    S = len(pool.mpki)
+    dlp = pool.dl_period if pool.dl_period is not None else np.zeros(S)
+    dlr = pool.dl_reqs if pool.dl_reqs is not None else np.zeros(S)
+    return {
+        "mpki": jnp.asarray(pool.mpki, jnp.float32),
+        "inst_per_miss": jnp.asarray(pool.inst_per_miss(), jnp.float32),
+        "rbl": jnp.asarray(pool.rbl, jnp.float32),
+        "blp": jnp.asarray(pool.blp, jnp.int32),
+        "is_gpu": jnp.asarray(pool.is_gpu, bool),
+        "dl_period": jnp.asarray(dlp, jnp.int32),
+        "dl_reqs": jnp.asarray(dlr, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-cycle: core progress + request generation into the pending register
+# ---------------------------------------------------------------------------
+
+def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
+                st: Dict[str, Any], active: jax.Array, t: jax.Array
+                ) -> Dict[str, Any]:
+    """Advance cores one cycle; fill empty pending registers.
+
+    active: (S,) bool — which sources exist in this workload (masking lets a
+    single jitted sim serve every workload mix and the alone-runs).
+    """
+    S = cfg.n_src
+    is_gpu = pool["is_gpu"]
+    is_accel = pool["dl_period"] > 0          # real-time accelerator (DASH)
+    is_cpu = ~is_gpu & ~is_accel
+    # accelerators are DMA-like streaming engines: deep request queues
+    mshr = jnp.where(is_gpu, cfg.gpu_mshr,
+                     jnp.where(is_accel, cfg.gpu_mshr, cfg.cpu_mshr))
+    room = st["outstanding"] < mshr
+    # CPU: progress instructions while not blocked on a full window and not
+    # waiting for MC admission
+    can_run = active & is_cpu & room & ~st["pend_valid"]
+    st = dict(st)
+    st["insts_acc"] = st["insts_acc"] + jnp.where(can_run, cfg.cpu_ipc, 0.0)
+    st["insts_done"] = st["insts_done"] + jnp.where(can_run, cfg.cpu_ipc, 0.0)
+
+    want_cpu = active & is_cpu & (st["insts_acc"] >= pool["inst_per_miss"]) \
+        & ~st["pend_valid"] & room
+    want_gpu = active & is_gpu & ~st["pend_valid"] & room
+    # accelerator: emit only this frame's remaining demand
+    want_accel = active & is_accel & ~st["pend_valid"] & room & \
+        (st["period_done"] + st["outstanding"] < pool["dl_reqs"])
+    want = want_cpu | want_gpu | want_accel
+
+    # address generation (one LCG draw per source per cycle; cheap)
+    rng, u = lcg_step(st["rng"])
+    rng2, u2 = lcg_step(rng)
+    st["rng"] = rng2
+    same = u < pool["rbl"]
+    n_banks_total = cfg.n_channels * cfg.n_banks
+    base = (jnp.arange(S, dtype=jnp.int32) * 3) % n_banks_total
+    new_ptr = st["bank_ptr"] + 1
+    new_bank = (base + new_ptr % jnp.maximum(pool["blp"], 1)) % n_banks_total
+    new_row = (u2 * cfg.n_rows).astype(jnp.int32)
+    bank = jnp.where(same, st["cur_bank"], new_bank)
+    row = jnp.where(same, st["cur_row"], new_row)
+
+    st["cur_bank"] = jnp.where(want, bank, st["cur_bank"])
+    st["cur_row"] = jnp.where(want, row, st["cur_row"])
+    st["bank_ptr"] = jnp.where(want & ~same, new_ptr, st["bank_ptr"])
+    st["pend_bank"] = jnp.where(want, bank, st["pend_bank"])
+    st["pend_row"] = jnp.where(want, row, st["pend_row"])
+    st["pend_birth"] = jnp.where(want, t, st["pend_birth"])
+    st["pend_valid"] = st["pend_valid"] | want
+    st["insts_acc"] = jnp.where(want_cpu, st["insts_acc"] -
+                                pool["inst_per_miss"], st["insts_acc"])
+    st["emitted"] = st["emitted"] + want.astype(jnp.int32)
+    st["outstanding"] = st["outstanding"] + want.astype(jnp.int32)
+    return st
+
+
+def completions_tick(st: Dict[str, Any], dram: Dict[str, Any], t: jax.Array
+                     ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Return requests whose data completed this cycle to their sources."""
+    slot = jnp.mod(t, RING)
+    done = dram["ring"][slot]                       # (S,)
+    st = dict(st)
+    dram = dict(dram)
+    st["outstanding"] = st["outstanding"] - done
+    st["completed"] = st["completed"] + done
+    st["period_done"] = st["period_done"] + done
+    dram["ring"] = dram["ring"].at[slot].set(0)
+    return st, dram
+
+
+def deadline_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
+                  st: Dict[str, Any], t: jax.Array) -> Dict[str, Any]:
+    """Frame-boundary accounting for deadline (DASH) sources."""
+    has_dl = pool["dl_period"] > 0
+    boundary = has_dl & (t > 0) & \
+        (jnp.mod(t, jnp.maximum(pool["dl_period"], 1)) == 0)
+    met = boundary & (st["period_done"] >= pool["dl_reqs"])
+    st = dict(st)
+    st["dl_met"] = st["dl_met"] + met.astype(jnp.int32)
+    st["dl_missed"] = st["dl_missed"] + (boundary & ~met).astype(jnp.int32)
+    st["period_done"] = jnp.where(boundary, 0, st["period_done"])
+    return st
+
+
+# ---------------------------------------------------------------------------
+# DRAM eligibility + issue
+# ---------------------------------------------------------------------------
+
+def eligibility(cfg: SimConfig, dram: Dict[str, Any], c: int,
+                bank: jax.Array, row: jax.Array, valid: jax.Array,
+                t: jax.Array):
+    """Per-candidate issue legality on channel c.
+
+    bank/row/valid: (N,) candidate arrays (bank is bank-in-channel index).
+    Returns (eligible (N,), lat (N,), is_hit (N,)).
+    """
+    tm = cfg.timing
+    openv = dram["open_valid"][c][bank]
+    openr = dram["open_row"][c][bank]
+    is_hit = openv & (openr == row)
+    lat = jnp.where(is_hit, tm.lat_hit,
+                    jnp.where(openv, tm.lat_conflict, tm.lat_closed)
+                    ).astype(jnp.int32)
+    ok_bank = dram["bank_free"][c][bank] <= t
+    oldest_act = jnp.min(dram["act_ring"][c])
+    ok_faw = is_hit | (t - oldest_act >= tm.t_faw)
+    ok_bus = t + lat >= dram["bus_free"][c]
+    return valid & ok_bank & ok_faw & ok_bus, lat, is_hit
+
+
+def issue(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any], c: int,
+          do_issue: jax.Array, bank: jax.Array, row: jax.Array,
+          src: jax.Array, birth: jax.Array, lat: jax.Array,
+          is_hit: jax.Array, t: jax.Array):
+    """Commit one issue on channel c (scalars; no-op when do_issue=False)."""
+    tm = cfg.timing
+    dram = dict(dram)
+    st = dict(st)
+    done = t + lat + tm.t_burst
+    safe_bank = jnp.where(do_issue, bank, 0)
+    dram["bank_free"] = dram["bank_free"].at[c, safe_bank].set(
+        jnp.where(do_issue, done, dram["bank_free"][c, safe_bank]))
+    dram["open_row"] = dram["open_row"].at[c, safe_bank].set(
+        jnp.where(do_issue, row, dram["open_row"][c, safe_bank]))
+    dram["open_valid"] = dram["open_valid"].at[c, safe_bank].set(
+        jnp.where(do_issue, True, dram["open_valid"][c, safe_bank]))
+    # activate bookkeeping (tFAW): replace the oldest entry
+    do_act = do_issue & ~is_hit
+    amin = jnp.argmin(dram["act_ring"][c])
+    dram["act_ring"] = dram["act_ring"].at[c, amin].set(
+        jnp.where(do_act, t, dram["act_ring"][c, amin]))
+    dram["bus_free"] = dram["bus_free"].at[c].set(
+        jnp.where(do_issue, done, dram["bus_free"][c]))
+    safe_src = jnp.where(do_issue, src, 0)
+    slot = jnp.mod(done, RING)
+    dram["ring"] = dram["ring"].at[slot, safe_src].add(
+        jnp.where(do_issue, 1, 0))
+    dram["hits"] = dram["hits"].at[safe_src].add(
+        jnp.where(do_issue & is_hit, 1, 0))
+    dram["issued"] = dram["issued"].at[safe_src].add(
+        jnp.where(do_issue, 1, 0))
+    st["sum_lat"] = st["sum_lat"].at[safe_src].add(
+        jnp.where(do_issue, (done - birth).astype(jnp.float32), 0.0))
+    return dram, st
+
+
+def channel_of(cfg: SimConfig, bank_global: jax.Array) -> jax.Array:
+    return jnp.mod(bank_global, cfg.n_channels)
+
+
+def bank_in_channel(cfg: SimConfig, bank_global: jax.Array) -> jax.Array:
+    return bank_global // cfg.n_channels

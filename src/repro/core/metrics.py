@@ -1,0 +1,51 @@
+"""System metrics: weighted speedup, max slowdown, harmonic speedup (§5)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.params import SimConfig
+from repro.core.workloads import CPU_BENCH, GPU_BENCH, Workload
+
+
+def per_source_alone(cfg: SimConfig, wl: Workload,
+                     alone: Dict[str, float]) -> np.ndarray:
+    """Alone performance vector (S,) for one workload."""
+    out = np.ones((cfg.n_src,), np.float64)
+    for i, b in enumerate(wl.cpu_ids[:cfg.n_cpu]):
+        out[i] = max(alone[CPU_BENCH[b][0]], 1e-9)
+    out[cfg.n_cpu] = max(alone[GPU_BENCH[wl.gpu_id][0]], 1e-9)
+    return out
+
+
+def workload_metrics(cfg: SimConfig, wl: Workload, shared_perf: np.ndarray,
+                     alone: Dict[str, float]) -> Dict[str, float]:
+    """shared_perf: (S,) per-source perf (IPC for CPUs, BW for GPU)."""
+    alone_v = per_source_alone(cfg, wl, alone)
+    ratio = np.maximum(shared_perf, 1e-9) / alone_v
+    n = cfg.n_cpu
+    cpu_ws = float(ratio[:n].sum())
+    gpu_su = float(ratio[n])
+    slowdowns = 1.0 / np.maximum(ratio[:n + 1], 1e-9)
+    return {
+        "weighted_speedup": cpu_ws + gpu_su,
+        "cpu_weighted_speedup": cpu_ws,
+        "gpu_speedup": gpu_su,
+        "max_slowdown": float(slowdowns.max()),
+        "cpu_max_slowdown": float(slowdowns[:n].max()),
+        "harmonic_speedup": float((n + 1) / (1.0 / ratio[:n + 1]).sum()),
+    }
+
+
+def aggregate(rows: Sequence[Dict[str, float]]) -> Dict[str, float]:
+    keys = rows[0].keys()
+    return {k: float(np.mean([r[k] for r in rows])) for k in keys}
+
+
+def by_category(workloads: Sequence[Workload],
+                rows: Sequence[Dict[str, float]]):
+    cats: Dict[str, List[Dict[str, float]]] = {}
+    for wl, r in zip(workloads, rows):
+        cats.setdefault(wl.category, []).append(r)
+    return {c: aggregate(rs) for c, rs in cats.items()}

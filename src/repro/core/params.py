@@ -1,0 +1,110 @@
+"""Static simulation parameters: DRAM timing, structure sizes, policy knobs.
+
+Timing values are DDR3-1600-class, expressed in memory-controller cycles
+(the paper's simulator granularity). The request lifecycle model is
+Ramulator-lite: a scheduled request occupies its bank for the access latency
+and the shared per-channel data bus for tBURST; non-hits count as ACTIVATEs
+against the per-channel tFAW window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Timing:
+    t_rcd: int = 11      # ACT -> READ
+    t_rp: int = 11       # PRE
+    t_cas: int = 11      # READ -> data
+    t_ras: int = 28      # ACT -> PRE (folded into busy window)
+    t_faw: int = 32      # four-ACT window
+    t_burst: int = 4     # data burst on the bus
+
+    @property
+    def lat_hit(self) -> int:
+        return self.t_cas
+
+    @property
+    def lat_conflict(self) -> int:          # open row, wrong row
+        return self.t_rp + self.t_rcd + self.t_cas
+
+    @property
+    def lat_closed(self) -> int:            # bank closed
+        return self.t_rcd + self.t_cas
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Static config (shapes are baked into the jitted step)."""
+
+    n_cpu: int = 8
+    n_gpu: int = 1
+    n_channels: int = 1
+    n_banks: int = 8                 # banks per channel
+    n_rows: int = 4096               # rows per bank (address space)
+
+    # centralized request buffer (per channel); SMS uses fifo/dcs sizes below
+    buf_entries: int = 64
+    cpu_reserve: float = 0.5         # fraction of entries GPU may NOT occupy
+
+    # SMS structures (per channel)
+    fifo_size: int = 16              # stage-1 per-source FIFO
+    dcs_size: int = 12               # stage-3 per-bank FIFO
+    batch_age_cap: int = 200         # stage-1 age threshold
+    sjf_prob: float = 0.9            # stage-2 SJF probability p
+
+    # cores
+    cpu_ipc: float = 2.0             # 3-wide OoO effective IPC between misses
+    cpu_mshr: int = 8
+    gpu_mshr: int = 128              # wavefront-scale outstanding requests
+
+    # policy knobs
+    atlas_alpha: float = 0.875
+    atlas_epoch: int = 2000
+    parbs_cap: int = 5
+    tcm_quantum: int = 1000
+    tcm_lat_frac: float = 0.25       # fraction of bandwidth for latency cluster
+    # SMS-DASH (paper §7 future work, after Usui et al. [201,202]):
+    # deadline-aware stage-2 — urgent accelerator batches preempt SJF/RR
+    dash: bool = False
+    dash_svc_est: float = 24.0       # estimated cycles per request (slack
+                                     # calc; conservative => earlier urgency)
+    timing: Timing = Timing()
+
+    @property
+    def n_src(self) -> int:
+        return self.n_cpu + self.n_gpu
+
+    @property
+    def gpu_cap(self) -> int:
+        return max(1, int(self.buf_entries * (1.0 - self.cpu_reserve)))
+
+    def replace(self, **kw) -> "SimConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SourcePool:
+    """Per-source trace parameters, as numpy arrays of len n_src.
+
+    CPU sources follow an MLP-limit core model (MSHR-bounded outstanding
+    misses, geometric inter-miss instruction gaps). The GPU source is a
+    wavefront-style generator: effectively unbounded queue of requests with
+    high row-buffer locality striped across `blp` banks (Fig 1 calibration).
+    """
+
+    mpki: np.ndarray        # CPU memory intensity (LLC MPKI); GPU ignores
+    rbl: np.ndarray         # P(next request same (bank,row))
+    blp: np.ndarray         # bank-level parallelism (stripe width)
+    is_gpu: np.ndarray      # bool
+    # real-time accelerator sources (SMS-DASH): need dl_reqs requests
+    # completed every dl_period cycles (0 = no deadline)
+    dl_period: np.ndarray = None
+    dl_reqs: np.ndarray = None
+
+    def inst_per_miss(self) -> np.ndarray:
+        return np.maximum(1000.0 / np.maximum(self.mpki, 1e-3), 1.0)

@@ -1,0 +1,68 @@
+"""Structure-count power/area proxy model (§5.2 reproduction).
+
+The centralized schedulers need a CAM over the whole request buffer (row
+match for FR-FCFS hit detection + global age/priority search each cycle) and
+per-entry ranking logic. SMS needs only SRAM FIFOs with head/tail pointers
+and a handful of small comparators.
+
+Per-bit constants (relative units; CAM ~9–10T vs 6T SRAM, match-line
+leakage; ranking comparators dominated by per-entry priority encode):
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.params import SimConfig
+
+# relative cost per bit (CAM cell 9-10T vs 6T SRAM; match-line leakage)
+SRAM_AREA = 1.0
+CAM_AREA = 1.7
+SRAM_LEAK = 1.0
+CAM_LEAK = 3.0
+
+ENTRY_BITS_PAYLOAD = 48      # src, birth, metadata (SRAM in both designs)
+ENTRY_BITS_MATCH = 24        # row+bank tag (CAM in centralized, SRAM in SMS)
+CMP_AREA_PER_ENTRY = 20.0    # age/priority comparator tree, per entry
+CMP_LEAK_PER_ENTRY = 20.0
+FIFO_CTRL_AREA = 24.0        # head/tail pointers + full/empty per FIFO
+FIFO_CTRL_LEAK = 10.0
+RANK_LOGIC_AREA_PER_SRC = 60.0   # ATLAS/TCM/PAR-BS ranking (per source)
+RANK_LOGIC_LEAK_PER_SRC = 40.0
+
+
+def centralized_cost(cfg: SimConfig, policy: str = "frfcfs") -> Dict[str, float]:
+    entries = cfg.n_channels * cfg.buf_entries
+    area = entries * (ENTRY_BITS_MATCH * CAM_AREA +
+                      ENTRY_BITS_PAYLOAD * SRAM_AREA + CMP_AREA_PER_ENTRY)
+    leak = entries * (ENTRY_BITS_MATCH * CAM_LEAK +
+                      ENTRY_BITS_PAYLOAD * SRAM_LEAK + CMP_LEAK_PER_ENTRY)
+    if policy != "frfcfs":
+        area += cfg.n_src * RANK_LOGIC_AREA_PER_SRC
+        leak += cfg.n_src * RANK_LOGIC_LEAK_PER_SRC
+    return {"area": area, "leakage": leak, "entries": entries}
+
+
+def sms_cost(cfg: SimConfig) -> Dict[str, float]:
+    s1_entries = cfg.n_channels * cfg.n_src * cfg.fifo_size
+    s3_entries = cfg.n_channels * cfg.n_banks * cfg.dcs_size
+    entries = s1_entries + s3_entries
+    n_fifos = cfg.n_channels * (cfg.n_src + cfg.n_banks)
+    bits = ENTRY_BITS_MATCH + ENTRY_BITS_PAYLOAD
+    area = entries * bits * SRAM_AREA + n_fifos * FIFO_CTRL_AREA \
+        + cfg.n_channels * (cfg.n_src * 8.0)   # batch scheduler compare
+    leak = entries * bits * SRAM_LEAK + n_fifos * FIFO_CTRL_LEAK \
+        + cfg.n_channels * (cfg.n_src * 5.0)
+    return {"area": area, "leakage": leak, "entries": entries}
+
+
+def compare(cfg: SimConfig) -> Dict[str, float]:
+    fr = centralized_cost(cfg, "frfcfs")
+    sm = sms_cost(cfg)
+    return {
+        "frfcfs_area": fr["area"], "sms_area": sm["area"],
+        "frfcfs_leakage": fr["leakage"], "sms_leakage": sm["leakage"],
+        "area_reduction_pct": 100.0 * (1 - sm["area"] / fr["area"]),
+        "leakage_reduction_pct": 100.0 * (1 - sm["leakage"] / fr["leakage"]),
+        "frfcfs_entries": fr["entries"], "sms_entries": sm["entries"],
+    }

@@ -1,0 +1,136 @@
+"""Simulation drivers: scan over cycles, vmap over workloads, metrics.
+
+``simulate(cfg, policy, pool_batch, active_batch, n_cycles, warmup)`` runs a
+batch of workloads through one scheduler and returns per-source measured
+metrics. Stats are delta-measured after a warmup period.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, schedulers, sms as sms_lib
+from repro.core.params import SimConfig, SourcePool
+
+POLICIES = ("frfcfs", "atlas", "parbs", "tcm", "sms")
+# sms_dash = SMS + deadline-aware stage 2 (paper §7 extension)
+ALL_POLICIES = POLICIES + ("sms_dash",)
+
+_SNAP_KEYS = ("insts_done", "emitted", "completed", "sum_lat", "dl_met",
+              "dl_missed")
+_DRAM_SNAP = ("hits", "issued")
+
+
+def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
+             pool: Dict[str, jax.Array], active: jax.Array
+             ) -> Dict[str, jax.Array]:
+    if policy == "sms_dash":
+        cfg = cfg.replace(dash=True)
+        policy = "sms"
+    st = engine.source_state(cfg)
+    st["_pool"] = pool
+    st["_active"] = active
+    dram = engine.dram_state(cfg)
+    if policy == "sms":
+        sched = sms_lib.sms_state(cfg)
+        step = sms_lib.make_step(cfg)
+    else:
+        sched = schedulers.buffer_state(cfg)
+        step = schedulers.make_step(cfg, policy)
+
+    carry = (st, sched, dram)
+    carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup))
+    st_w, _, dram_w = carry
+    snap = {k: st_w[k] for k in _SNAP_KEYS}
+    snap.update({k: dram_w[k] for k in _DRAM_SNAP})
+    carry, _ = jax.lax.scan(step, carry,
+                            jnp.arange(warmup, warmup + n_cycles))
+    st_f, _, dram_f = carry
+
+    cyc = jnp.float32(n_cycles)
+    d = lambda k: (st_f[k] if k in st_f else dram_f[k]).astype(jnp.float32) \
+        - snap[k].astype(jnp.float32)
+    completed = d("completed")
+    return {
+        "ipc": d("insts_done") / cyc,
+        "bw": completed / cyc,                        # requests per cycle
+        "mpkc": d("emitted") / cyc * 1000.0,
+        "rbl": d("hits") / jnp.maximum(d("issued"), 1.0),
+        "avg_lat": d("sum_lat") / jnp.maximum(completed, 1.0),
+        "completed": completed,
+        "emitted": d("emitted"),
+        "outstanding_end": st_f["outstanding"].astype(jnp.float32),
+        "inflight_unserved": (st_f["emitted"] - st_f["completed"]
+                              ).astype(jnp.float32),
+        "dl_met": d("dl_met"),
+        "dl_missed": d("dl_missed"),
+    }
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
+               pool_batch, active_batch):
+    return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup, p, a)
+                    )(pool_batch, active_batch)
+
+
+def _fill_deadline_keys(pool: Dict[str, Any], shape) -> Dict[str, Any]:
+    pool = dict(pool)
+    for k in ("dl_period", "dl_reqs"):
+        if k not in pool:
+            pool[k] = jnp.zeros(shape, jnp.int32)
+    return pool
+
+
+def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
+             active_batch: np.ndarray, n_cycles: int = 20_000,
+             warmup: int = 2_000) -> Dict[str, np.ndarray]:
+    """pool_batch: dict of (W, S) arrays; active_batch: (W, S) bool."""
+    pool_batch = {k: jnp.asarray(v) for k, v in pool_batch.items()}
+    pool_batch = _fill_deadline_keys(pool_batch, np.asarray(
+        active_batch).shape)
+    out = _sim_batch(cfg, policy, n_cycles, warmup, pool_batch,
+                     jnp.asarray(active_batch))
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
+                   active: np.ndarray, n_cycles: int = 2_000):
+    """Single-workload run returning the FINAL RAW STATE (invariant tests).
+
+    pool: dict of (S,) arrays; active: (S,) bool.
+    Returns (src_state, sched_state, dram_state) as numpy trees.
+    """
+    if policy == "sms_dash":
+        cfg = cfg.replace(dash=True)
+        policy = "sms"
+    st = engine.source_state(cfg)
+    st["_pool"] = _fill_deadline_keys(
+        {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
+    st["_active"] = jnp.asarray(active)
+    dram = engine.dram_state(cfg)
+    if policy == "sms":
+        sched = sms_lib.sms_state(cfg)
+        step = sms_lib.make_step(cfg)
+    else:
+        sched = schedulers.buffer_state(cfg)
+        step = schedulers.make_step(cfg, policy)
+
+    @jax.jit
+    def run(carry):
+        return jax.lax.scan(step, carry, jnp.arange(n_cycles))[0]
+
+    st_f, sched_f, dram_f = run((st, sched, dram))
+    to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)
+    return to_np(st_f), to_np(sched_f), to_np(dram_f)
+
+
+def perf_vector(cfg: SimConfig, metrics: Dict[str, np.ndarray],
+                pool_batch: Dict[str, np.ndarray]) -> np.ndarray:
+    """Per-source performance: IPC for CPUs, attained BW for the GPU. (W,S)."""
+    is_gpu = np.asarray(pool_batch["is_gpu"], bool)
+    return np.where(is_gpu, metrics["bw"], metrics["ipc"])

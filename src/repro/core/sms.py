@@ -1,0 +1,210 @@
+"""Staged Memory Scheduler — the paper's contribution (§2).
+
+Three decoupled stages, all simple FIFOs:
+  1. per-source batch formation FIFOs (C, S, F): consecutive same-(bank,row)
+     requests form a batch; ready on row-change / age threshold / full FIFO;
+  2. batch scheduler: picks a ready batch — SJF (fewest in-flight across all
+     stages) with probability p, round-robin with 1-p — then drains it one
+     request/cycle into stage 3;
+  3. DRAM command scheduler (DCS): per-bank FIFOs (C, B, D); only FIFO heads
+     issue; DRAM timing legality enforced; round-robin across banks.
+
+Unlike the centralized schedulers there is no CAM scan: every structure is a
+head/length circular FIFO — which is exactly the power/area claim §5.2 audits.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.core.params import SimConfig
+
+
+def sms_state(cfg: SimConfig) -> Dict[str, Any]:
+    C, S, F = cfg.n_channels, cfg.n_src, cfg.fifo_size
+    B, D = cfg.n_banks, cfg.dcs_size
+    zi = lambda *s: jnp.zeros(s, jnp.int32)
+    return {
+        # stage 1: per-source FIFOs
+        "f_row": zi(C, S, F), "f_bank": zi(C, S, F), "f_birth": zi(C, S, F),
+        "f_head": zi(C, S), "f_len": zi(C, S),
+        # stage 2: batch scheduler
+        "drain_src": jnp.full((C,), -1, jnp.int32),
+        "drain_left": zi(C),
+        "rr_ptr": zi(C),
+        "rng2": jnp.arange(1, C + 1, dtype=jnp.uint32) * jnp.uint32(40503),
+        # stage 3: per-bank DCS FIFOs
+        "d_row": zi(C, B, D), "d_src": zi(C, B, D), "d_birth": zi(C, B, D),
+        "d_head": zi(C, B), "d_len": zi(C, B), "rr_bank": zi(C),
+    }
+
+
+def _fifo_view(rows, banks, births, head, length, F):
+    """Return FIFO contents in age order + in-range mask. (..., F) arrays."""
+    idx = (head[..., None] + jnp.arange(F)) % F
+    take = lambda a: jnp.take_along_axis(a, idx, axis=-1)
+    in_range = jnp.arange(F) < length[..., None]
+    return take(rows), take(banks), take(births), in_range
+
+
+def batch_info(cfg: SimConfig, sms: Dict[str, Any], t):
+    """(C,S) arrays: batch_len (front same-(bank,row) run) and readiness."""
+    F = cfg.fifo_size
+    rows_o, banks_o, births_o, in_r = _fifo_view(
+        sms["f_row"], sms["f_bank"], sms["f_birth"],
+        sms["f_head"], sms["f_len"], F)
+    eq = (rows_o == rows_o[..., :1]) & (banks_o == banks_o[..., :1]) & in_r
+    run = jnp.cumprod(eq.astype(jnp.int32), axis=-1)
+    batch_len = jnp.sum(run, axis=-1)                       # (C,S)
+    nonempty = sms["f_len"] > 0
+    row_changed = batch_len < sms["f_len"]
+    aged = nonempty & (t - births_o[..., 0] >= cfg.batch_age_cap)
+    full = sms["f_len"] >= F
+    ready = nonempty & (row_changed | aged | full)
+    return batch_len, ready
+
+
+def stage1_admit(cfg: SimConfig, pool, st, sms, t):
+    """Decentralized admission: every source pushes into its own FIFO."""
+    S, F = cfg.n_src, cfg.fifo_size
+    st = dict(st)
+    sms = dict(sms)
+    ch = engine.channel_of(cfg, st["pend_bank"])            # (S,)
+    room = sms["f_len"][ch, jnp.arange(S)] < F
+    do = st["pend_valid"] & room
+    slot = (sms["f_head"][ch, jnp.arange(S)] +
+            sms["f_len"][ch, jnp.arange(S)]) % F
+    cs, ss = jnp.where(do, ch, 0), jnp.arange(S)
+    slot_s = jnp.where(do, slot, 0)
+    wr = lambda a, v: a.at[cs, ss, slot_s].set(
+        jnp.where(do, v, a[cs, ss, slot_s]))
+    sms["f_row"] = wr(sms["f_row"], st["pend_row"])
+    sms["f_bank"] = wr(sms["f_bank"],
+                       engine.bank_in_channel(cfg, st["pend_bank"]))
+    sms["f_birth"] = wr(sms["f_birth"], st["pend_birth"])
+    sms["f_len"] = sms["f_len"].at[cs, ss].add(jnp.where(do, 1, 0))
+    st["pend_valid"] = st["pend_valid"] & ~do
+    return st, sms
+
+
+def stage2_drain(cfg: SimConfig, pool, st, sms, t):
+    """Pick ready batches (SJF w.p. p / RR w.p. 1-p) and drain 1 req/cycle."""
+    C, S, F = cfg.n_channels, cfg.n_src, cfg.fifo_size
+    B, D = cfg.n_banks, cfg.dcs_size
+    sms = dict(sms)
+    batch_len, ready = batch_info(cfg, sms, t)
+
+    # --- pick a new batch on idle channels ---
+    idle = sms["drain_left"] <= 0
+    rng2, u = engine.lcg_step(sms["rng2"])
+    sms["rng2"] = rng2
+    use_sjf = u < cfg.sjf_prob                              # (C,)
+    inflight = (st["emitted"] - st["completed"]).astype(jnp.int32)  # (S,)
+    sjf_key = jnp.where(ready, inflight[None, :], 1 << 28)  # (C,S)
+    sjf_pick = jnp.argmin(sjf_key, axis=-1)
+    rr_off = (jnp.arange(S)[None, :] - sms["rr_ptr"][:, None]) % S
+    rr_key = jnp.where(ready, rr_off, 1 << 28)
+    rr_pick = jnp.argmin(rr_key, axis=-1)
+    pick = jnp.where(use_sjf, sjf_pick, rr_pick)
+    if cfg.dash:
+        # SMS-DASH (paper §7 / Usui et al.): a deadline source whose frame
+        # slack is below its estimated remaining service time preempts the
+        # SJF/RR choice; least-slack-first among urgent ready batches.
+        pool = st["_pool"]
+        has_dl = pool["dl_period"] > 0
+        remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
+        time_left = pool["dl_period"] - jnp.mod(
+            t, jnp.maximum(pool["dl_period"], 1))
+        slack = time_left.astype(jnp.float32) - \
+            remaining.astype(jnp.float32) * cfg.dash_svc_est
+        urgent = has_dl & (slack < 0.0) & (remaining > 0)
+        urgent_ready = ready & urgent[None, :]
+        u_key = jnp.where(urgent_ready, slack[None, :], jnp.float32(1e30))
+        u_pick = jnp.argmin(u_key, axis=-1)
+        any_urgent = jnp.any(urgent_ready, axis=-1)
+        pick = jnp.where(any_urgent, u_pick, pick)
+        use_sjf = use_sjf | any_urgent          # don't advance rr on preempt
+    any_ready = jnp.any(ready, axis=-1)
+    start = idle & any_ready
+    sms["drain_src"] = jnp.where(start, pick.astype(jnp.int32),
+                                 sms["drain_src"])
+    sms["drain_left"] = jnp.where(
+        start, batch_len[jnp.arange(C), pick], sms["drain_left"])
+    sms["rr_ptr"] = jnp.where(start & ~use_sjf, (pick + 1) % S,
+                              sms["rr_ptr"]).astype(jnp.int32)
+
+    # --- drain one request per channel into the DCS ---
+    draining = sms["drain_left"] > 0
+    s = jnp.clip(sms["drain_src"], 0, S - 1)                # (C,)
+    cidx = jnp.arange(C)
+    head = sms["f_head"][cidx, s]
+    row = sms["f_row"][cidx, s, head]
+    bank = sms["f_bank"][cidx, s, head]
+    birth = sms["f_birth"][cidx, s, head]
+    has_req = sms["f_len"][cidx, s] > 0
+    # safety: a desynced drain counter on an empty FIFO must not deadlock
+    sms["drain_left"] = jnp.where(draining & ~has_req, 0, sms["drain_left"])
+    dcs_room = sms["d_len"][cidx, bank] < D
+    do = draining & has_req & dcs_room
+    # pop stage-1
+    sms["f_head"] = sms["f_head"].at[cidx, s].set(
+        jnp.where(do, (head + 1) % F, head))
+    sms["f_len"] = sms["f_len"].at[cidx, s].add(jnp.where(do, -1, 0))
+    sms["drain_left"] = sms["drain_left"] - do.astype(jnp.int32)
+    # push stage-3
+    dslot = (sms["d_head"][cidx, bank] + sms["d_len"][cidx, bank]) % D
+    bsafe = jnp.where(do, bank, 0)
+    dsafe = jnp.where(do, dslot, 0)
+    wr = lambda a, v: a.at[cidx, bsafe, dsafe].set(
+        jnp.where(do, v, a[cidx, bsafe, dsafe]))
+    sms["d_row"] = wr(sms["d_row"], row)
+    sms["d_src"] = wr(sms["d_src"], s.astype(jnp.int32))
+    sms["d_birth"] = wr(sms["d_birth"], birth)
+    sms["d_len"] = sms["d_len"].at[cidx, bsafe].add(jnp.where(do, 1, 0))
+    return st, sms
+
+
+def stage3_issue(cfg: SimConfig, pool, st, sms, dram, t):
+    """DCS: issue from per-bank FIFO heads, RR across eligible banks."""
+    C, B, D = cfg.n_channels, cfg.n_banks, cfg.dcs_size
+    sms = dict(sms)
+    for c in range(C):
+        head = sms["d_head"][c]                             # (B,)
+        bidx = jnp.arange(B)
+        row = sms["d_row"][c, bidx, head]
+        src = sms["d_src"][c, bidx, head]
+        birth = sms["d_birth"][c, bidx, head]
+        valid = sms["d_len"][c] > 0
+        elig, lat, is_hit = engine.eligibility(cfg, dram, c, bidx, row,
+                                               valid, t)
+        rr_key = jnp.where(elig, (bidx - sms["rr_bank"][c]) % B, 1 << 28)
+        pick = jnp.argmin(rr_key)
+        do = elig[pick]
+        dram, st = engine.issue(cfg, dram, st, c, do, pick, row[pick],
+                                src[pick], birth[pick], lat[pick],
+                                is_hit[pick], t)
+        psafe = jnp.where(do, pick, 0)
+        sms["d_head"] = sms["d_head"].at[c, psafe].set(
+            jnp.where(do, (head[psafe] + 1) % D, head[psafe]))
+        sms["d_len"] = sms["d_len"].at[c, psafe].add(jnp.where(do, -1, 0))
+        sms["rr_bank"] = sms["rr_bank"].at[c].set(
+            jnp.where(do, (pick + 1) % B, sms["rr_bank"][c]).astype(jnp.int32))
+    return st, sms, dram
+
+
+def make_step(cfg: SimConfig):
+    def step(carry, t):
+        st, sms, dram = carry
+        pool, active = st["_pool"], st["_active"]
+        st, dram = engine.completions_tick(st, dram, t)
+        st = engine.deadline_tick(cfg, pool, st, t)
+        st = engine.source_tick(cfg, pool, st, active, t)
+        st, sms = stage1_admit(cfg, pool, st, sms, t)
+        st, sms = stage2_drain(cfg, pool, st, sms, t)
+        st, sms, dram = stage3_issue(cfg, pool, st, sms, dram, t)
+        return (st, sms, dram), None
+
+    return step

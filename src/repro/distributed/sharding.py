@@ -1,0 +1,140 @@
+"""Sharding rules: logical param/activation axes -> mesh axes.
+
+The production mesh is fixed by the assignment: single-pod ``(data=16,
+model=16)``, multi-pod ``(pod=2, data=16, model=16)``. Per-arch rules resolve
+which logical axes can legally map onto ``model`` (divisibility) and fall back
+to replication otherwise — e.g. gemma2 has 8 q-heads < 16-way TP, so its
+attention params replicate over ``model`` while MLP/vocab stay sharded (see
+DESIGN.md §5 and the §Perf hillclimb for the batch-reshard alternative).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+PyTree = Any
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Mesh axes the batch dim is sharded over (pod+data when divisible)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = math.prod(mesh_axis_size(mesh, a) for a in axes)
+    if axes and global_batch % total == 0:
+        return tuple(axes)
+    if "data" in mesh.axis_names and \
+            global_batch % mesh_axis_size(mesh, "data") == 0:
+        return ("data",)
+    return ()
+
+
+def axis_rules(cfg: ModelConfig, mesh: Mesh) -> Dict[Optional[str], Any]:
+    tp = mesh_axis_size(mesh, "model")
+    div = lambda n: n and n % tp == 0
+    d_inner = cfg.ssm_expand * cfg.d_model
+    rules: Dict[Optional[str], Any] = {
+        None: None,
+        "layers": None,
+        "embed": None,
+        "head_dim": None,
+        "vocab": "model" if div(cfg.vocab_size) else None,
+        "mlp": "model" if div(cfg.d_ff or cfg.moe_d_ff) else None,
+        "experts": "model" if div(cfg.n_experts) else None,
+        "heads": "model" if div(cfg.n_heads) else None,
+        "kv_heads": "model" if div(cfg.n_kv_heads) else None,
+        # ssm inner dim: sharded for the hybrid (hymba) family; the tiny
+        # xlstm-125m replicates its cell (see DESIGN.md §5)
+        "inner": "model" if (cfg.family == "hybrid" and div(d_inner)) else None,
+    }
+    return rules
+
+
+def param_shardings(axes_tree: PyTree, cfg: ModelConfig, mesh: Mesh) -> PyTree:
+    rules = axis_rules(cfg, mesh)
+
+    def to_sharding(axes: Tuple[Optional[str], ...]) -> NamedSharding:
+        # a mesh axis may appear once per spec: first logical axis wins
+        # (e.g. MoE expert weights (experts, embed, mlp): `experts` takes
+        # `model`; the per-expert mlp dim stays local)
+        spec, used = [], set()
+        for a in axes:
+            m = rules.get(a)
+            if m is not None and m in used:
+                m = None
+            if m is not None:
+                used.add(m)
+            spec.append(m)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(
+        to_sharding, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> PyTree:
+    """Shardings for the train-batch dict (tokens/labels/stub embeddings)."""
+    bspec = batch_axes(mesh, shape.global_batch)
+    b = bspec if bspec else None
+    tok = NamedSharding(mesh, P(b, None))
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        out["image_embeds"] = NamedSharding(mesh, P(b, None, None))
+    if cfg.family == "audio":
+        out["audio_embeds"] = NamedSharding(mesh, P(b, None, None))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> PyTree:
+    """Shardings for the decode cache, per DESIGN.md §5.
+
+    * kv heads sharded over ``model`` when divisible;
+    * otherwise the *sequence* dim of the cache is sharded over ``model``
+      (flash-decoding style: decode softmax/contract collectives are tiny);
+    * batch over (pod, data) when divisible; batch==1 additionally pushes the
+      sequence dim onto ``data``.
+    """
+    rules = axis_rules(cfg, mesh)
+    bspec = batch_axes(mesh, shape.global_batch)
+    b = bspec if bspec else None
+    kv = rules["kv_heads"]
+    seq_axes = []
+    if kv is None:
+        seq_axes.append("model")
+    if not bspec and "data" in mesh.axis_names and \
+            shape.seq_len % (mesh_axis_size(mesh, "data") *
+                             mesh_axis_size(mesh, "model")) == 0:
+        seq_axes.insert(0, "data")
+    seq = tuple(seq_axes) if seq_axes else None
+    kv_sh = NamedSharding(mesh, P(None, b, seq, kv, None))
+
+    if cfg.family == "ssm":
+        # xlstm: list of per-layer state tuples, replicated (tiny model)
+        def sh(x):
+            return NamedSharding(mesh, P(*([None] * len(x.shape))))
+        from repro.models import xlstm as xlstm_lib
+        cache = xlstm_lib.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     abstract=True)
+        return jax.tree_util.tree_map(sh, cache)
+    if cfg.family == "hybrid":
+        inner = rules["inner"]
+        return {"k": kv_sh, "v": kv_sh,
+                "ssm": NamedSharding(mesh, P(None, b, inner, None)),
+                "conv": NamedSharding(mesh, P(None, b, None, inner))}
+    if cfg.family == "audio":
+        cross = NamedSharding(mesh, P(None, b, None, kv, None))
+        return {"k": kv_sh, "v": kv_sh, "ck": cross, "cv": cross}
+    return {"k": kv_sh, "v": kv_sh}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,114 @@
+"""Flash attention forward Pallas-TPU kernel.
+
+Grid: (B*Hq, Sq/block_q, Sk/block_k) — the k axis is innermost and reduces
+into VMEM scratch (acc, row-max, row-sum) that persists across sequential
+grid steps; the output block is written on the final k step. Supports
+causal, sliding-window and logit softcap (gemma2). GQA maps q-head blocks
+onto kv heads in the BlockSpec index map (no materialized kv expansion —
+this is the bandwidth win over the XLA path).
+
+Block shapes are MXU-aligned (128x128 default); VMEM working set per step:
+q (bq,d) + k,v (bk,d) + acc (bq,d) fp32 ~ 0.25 MB at d=128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            block_q: int, block_k: int, n_k_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+
+    # skip fully-masked blocks (outside the causal / window band)
+    band = jnp.any(mask)
+
+    @pl.when(band)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, Sq, d); k/v: (B, Hkv, Sk, d). Returns (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    assert g * Hkv == Hq
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, \
+        f"seq ({Sq},{Sk}) must divide blocks ({block_q},{block_k})"
+    n_k = Sk // block_k
+    qr = q.reshape(B * Hq, Sq, d)
+    kr = k.reshape(B * Hkv, Sk, d)
+    vr = v.reshape(B * Hkv, Sk, d)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_k_blocks=n_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, d)

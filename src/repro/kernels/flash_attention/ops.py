@@ -1,0 +1,17 @@
+"""Jitted public wrapper: picks interpret mode off-TPU automatically."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, causal=causal, window=window, softcap=softcap,
+                   block_q=block_q, block_k=block_k, interpret=interpret)

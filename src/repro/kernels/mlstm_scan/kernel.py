@@ -1,0 +1,112 @@
+"""Chunkwise-parallel mLSTM Pallas-TPU kernel (xLSTM's hot op).
+
+Grid: (B*H, n_chunks) — the chunk axis is innermost and sequential; the
+stabilized matrix-memory state (C̄ (dh,dh), n̄ (dh), m ()) lives in VMEM
+scratch across chunk steps. Within a chunk everything is a masked
+(chunk x chunk) matmul — MXU work — exactly the linear-time formulation
+`repro.models.xlstm.mlstm_chunk_scan` uses in XLA.
+
+VMEM working set per step at chunk=128, dh=384:
+q,k,v 3·128·384·4 + C 384²·4 + D 128²·4 ≈ 1.4 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+MMIN = -40.0
+
+
+def _kernel(q_ref, k_ref, v_ref, lf_ref, li_ref, h_ref,
+            c_ref, n_ref, m_ref, *, chunk: int, dh: int, n_chunks: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, MMIN)
+
+    q = q_ref[0].astype(jnp.float32) * (dh ** -0.5)      # (L, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lf = lf_ref[0].astype(jnp.float32)                   # (L,)
+    li = li_ref[0].astype(jnp.float32)
+    C, n, m = c_ref[...], n_ref[...], m_ref[0]
+
+    F = jnp.cumsum(lf)                                   # (L,)
+    dlog = F[:, None] - F[None, :] + li[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dlog = jnp.where(row >= col, dlog, NEG)
+    state_log = F + m                                    # (L,)
+    m_i = jnp.maximum(jnp.max(dlog, axis=1), state_log)
+    m_i = jnp.maximum(m_i, MMIN)
+    w = jnp.exp(dlog - m_i[:, None])                     # (L, L)
+    sqk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (L, L)
+    wsqk = w * sqk
+    num = jax.lax.dot_general(wsqk, v, (((1,), (0,)), ((), ())))
+    den = jnp.sum(wsqk, axis=1)
+    sfac = jnp.exp(state_log - m_i)                      # (L,)
+    num = num + sfac[:, None] * jax.lax.dot_general(
+        q, C, (((1,), (0,)), ((), ())))
+    den = den + sfac * jnp.sum(q * n[None, :], axis=1)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[:, None]
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    # end-of-chunk state
+    FL = F[chunk - 1]
+    m_new = jnp.maximum(FL + m, jnp.max(FL - F + li))
+    m_new = jnp.maximum(m_new, MMIN)
+    wL = jnp.exp(FL - F + li - m_new)                    # (L,)
+    c_ref[...] = jnp.exp(FL + m - m_new) * C + jax.lax.dot_general(
+        k * wL[:, None], v, (((0,), (0,)), ((), ())))
+    n_ref[...] = jnp.exp(FL + m - m_new) * n + jnp.sum(k * wL[:, None],
+                                                       axis=0)
+    m_ref[0] = m_new
+
+
+def mlstm_scan(q, k, v, lf, li, *, chunk: int = 128,
+               interpret: bool = False):
+    """q,k,v: (B,H,S,dh); lf,li: (B,H,S) log-forget/log-input gates.
+
+    Returns h: (B,H,S,dh) (fresh zero state; for decode-state threading use
+    the XLA path in repro.models.xlstm).
+    """
+    B, H, S, dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} must divide chunk={chunk}"
+    n_chunks = S // chunk
+    qr = q.reshape(B * H, S, dh)
+    kr = k.reshape(B * H, S, dh)
+    vr = v.reshape(B * H, S, dh)
+    lfr = lf.reshape(B * H, S)
+    lir = li.reshape(B * H, S)
+
+    kernel = functools.partial(_kernel, chunk=chunk, dh=dh,
+                               n_chunks=n_chunks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk), lambda b, i: (b, i)),
+            pl.BlockSpec((1, chunk), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, lfr, lir)
+    return out.reshape(B, H, S, dh)

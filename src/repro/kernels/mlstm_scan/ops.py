@@ -1,0 +1,14 @@
+"""Jitted public wrapper: picks interpret mode off-TPU automatically."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm_scan.kernel import mlstm_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_scan(q, k, v, lf, li, *, chunk: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, lf, li, chunk=chunk, interpret=interpret)

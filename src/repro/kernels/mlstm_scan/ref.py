@@ -1,0 +1,19 @@
+"""Oracle: the validated XLA chunkwise mLSTM from the model library."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.xlstm import mlstm_chunk_scan
+
+
+def mlstm_scan_ref(q, k, v, lf, li, chunk: int = 128):
+    """q,k,v: (B,H,S,dh); lf,li: (B,H,S). Zero initial state."""
+    B, H, S, dh = q.shape
+    s0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+          jnp.zeros((B, H, dh), jnp.float32),
+          jnp.full((B, H), -40.0, jnp.float32))
+    h, _ = mlstm_chunk_scan(q.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32),
+                            lf.astype(jnp.float32), li.astype(jnp.float32),
+                            s0, chunk=chunk)
+    return h.astype(q.dtype)

@@ -1,0 +1,109 @@
+"""Paged decode attention Pallas-TPU kernel.
+
+One new-token query per sequence attends over a paged KV cache:
+
+  k_pages/v_pages : (n_pages_total, Hkv, page_size, d)   — the page pool
+  page_table      : (B, max_pages)  int32                — scalar-prefetched
+  lengths         : (B,)            int32                — valid tokens/seq
+
+Grid: (B, Hkv, max_pages); the page axis is innermost and reduces into VMEM
+scratch. The page table is scalar-prefetched so the BlockSpec index map can
+stream exactly the pages each sequence owns HBM->VMEM (pages shared between
+sequences — e.g. SMS stage-1 prefix-local batches — hit the same blocks).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, page_size: int, n_slots: int,
+            scale: float, softcap: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    start = i * page_size
+
+    @pl.when(start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (page, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, page)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(i == n_slots - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    softcap: float = 0.0,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, d); pages: (P, Hkv, page, d); page_table: (B, n_slots).
+
+    Returns (B, Hq, d).
+    """
+    B, Hq, d = q.shape
+    P, Hkv, page_size, _ = k_pages.shape
+    g = Hq // Hkv
+    assert g * Hkv == Hq
+    n_slots = page_table.shape[1]
+    qr = q.reshape(B, Hkv, g, d)
+
+    kernel = functools.partial(_kernel, page_size=page_size, n_slots=n_slots,
+                               scale=1.0 / math.sqrt(d), softcap=softcap)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, i, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h, i, pt, ln: (pt[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, d),
+                         lambda b, h, i, pt, ln: (pt[b, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda b, h, i, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qr, k_pages, v_pages)
+    return out.reshape(B, Hq, d)

@@ -1,0 +1,17 @@
+"""Jitted public wrapper: picks interpret mode off-TPU automatically."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    softcap: float = 0.0):
+    interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k_pages, v_pages, page_table, lengths,
+                   softcap=softcap, interpret=interpret)

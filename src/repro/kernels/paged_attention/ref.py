@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths,
+                        softcap: float = 0.0):
+    """q: (B, Hq, d); pages: (P, Hkv, page, d); page_table: (B, n_slots)."""
+    B, Hq, d = q.shape
+    P, Hkv, page, _ = k_pages.shape
+    g = Hq // Hkv
+    n_slots = page_table.shape[1]
+    # gather each sequence's pages into contiguous (B, Hkv, S, d)
+    k = k_pages[page_table]                       # (B, n_slots, Hkv, page, d)
+    v = v_pages[page_table]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, n_slots * page, d)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, n_slots * page, d)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(n_slots * page)[None, None, :]
+    s = jnp.where(pos < lengths[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

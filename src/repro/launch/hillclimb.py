@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> record.
+
+Each iteration re-lowers a cell with one RunConfig knob flipped and records
+the calibrated roofline-term deltas against the cell's baseline into
+experiments/perf/<cell>.json. EXPERIMENTS.md §Perf is written from these
+records.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|all]
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, RunConfig
+from repro.launch import dryrun
+
+PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
+
+# (cell_id, arch, shape, [(tag, hypothesis, run_overrides)...])
+PLANS = [
+    ("A", "gemma2-2b", "train_4k", [
+        ("reshard_attn",
+         "8 q-heads < 16-way TP leaves attention REPLICATED over `model`: "
+         "~16x redundant attention flops/chip. Respreading the batch over "
+         "(data,model) for the attention op makes it pure-DP; predict the "
+         "compute term drops by ~the replicated attention share (napkin: "
+         "attention ~45% of per-chip HLO flops at 4k seq -> ~40% compute-term "
+         "cut) at the cost of 2 activation reshards/layer (collective +"
+         "~4*B*S*d bytes/layer).",
+         {"attn_batch_reshard": True}),
+        ("remat_dots",
+         "remat='full' recomputes the whole forward in backward (~1.33x "
+         "flops). Policy 'dots' saves matmul outputs: predict ~15-25% "
+         "compute-term cut, memory term rises by saved activations.",
+         {"remat": "dots"}),
+        ("reshard_attn+dots",
+         "Compose both wins if they are independent terms.",
+         {"attn_batch_reshard": True, "remat": "dots"}),
+        ("pad_heads",
+         "reshard_attn cut memory -73% but its 2 reshards/layer made "
+         "collective the new bound (10.6s). Alternative: PAD q-heads 8->16 "
+         "so attention shards over `model` with ZERO extra collectives, at "
+         "2x attention flops (padded heads attend to zeros). Predict: "
+         "memory term ~= reshard variant, collective back to ~baseline -> "
+         "net step bound ~3.8s vs 14.2s baseline (3.7x).",
+         {"attn_pad_heads": True}),
+        ("pad_heads+dots",
+         "Compose the winning sharding fix with the remat policy (judge "
+         "remat part on raw).",
+         {"attn_pad_heads": True, "remat": "dots"}),
+    ]),
+    ("B", "command-r-plus-104b", "decode_32k", [
+        ("cache_anchor",
+         "Baseline decode is COLLECTIVE-bound at 2.75s/step (~137 GB/step): "
+         "the HLO shows SPMD 'involuntary full rematerialization' on the "
+         "cache update — the broadcast new-k operand's sharding mismatches "
+         "the sequence-sharded cache, so SPMD all-gathers the 8.6 GB cache "
+         "every layer. Anchoring the updated cache with a sharding "
+         "constraint should reshard the (tiny) broadcast instead: predict "
+         "collective term drops by >100x to the all-reduce floor.",
+         {"decode_cache_anchor": True}),
+        ("grouped_kv",
+         "Decode expands KV 8->96 heads before the attention einsums: the "
+         "dominant HBM traffic (32k-seq KV cache) is read 12x per step. "
+         "Grouped-query attention reads it once: predict the memory term "
+         "drops toward cache-size/HBM_BW (~12x cut on the KV read, bounded "
+         "by the cache-update write traffic).",
+         {"decode_grouped": True}),
+        ("anchor+grouped",
+         "Compose: memory-bound after the anchor fix, so the grouped-KV "
+         "read cut should now move the dominant term.",
+         {"decode_cache_anchor": True, "decode_grouped": True}),
+        ("grouped+slim",
+         "After grouped-KV the remaining bytes include a redundant causal "
+         "mask pass over (B, 32k) per layer: for a single query the kv_len "
+         "mask subsumes causality. Predict a further single-digit% memory "
+         "cut.",
+         {"decode_grouped": True, "decode_slim_mask": True,
+          "decode_cache_anchor": True}),
+    ]),
+    ("C", "qwen1.5-110b", "train_4k", [
+        ("zero1",
+         "Optimizer state (2x f32 moments of 111B params / 256 chips) "
+         "dominates per-chip memory traffic; ZeRO-1 shards moments over "
+         "`data` (16x): predict the memory term drops by ~the moment-update "
+         "traffic share; collective bytes roughly unchanged (grad "
+         "reduce-scatter replaces part of the all-reduce).",
+         {"zero1": True}),
+        ("remat_dots",
+         "remat='full' recomputes each block in backward; 'dots' saves "
+         "matmul outputs. NOTE: judge on RAW scanned terms — the unrolled "
+         "calibration variants CSE the recompute away, hiding remat cost.",
+         {"remat": "dots"}),
+        ("bf16_master",
+         "Halve param+moment traffic: bf16 master params and moments "
+         "(production uses stochastic rounding on TPU). Predict the memory "
+         "term drops by ~the optimizer-traffic share (params+grads+2 "
+         "moments read+write ~10 passes over 434 MB/chip).",
+         {"param_dtype_bf16": True}),
+    ]),
+    # D: worst roofline fraction in the whole table (whisper train, 0.050)
+    ("D", "whisper-large-v3", "train_4k", [
+        ("pad_heads",
+         "whisper has 20 heads (MHA) < no multiple of TP16 -> encoder+decoder "
+         "self/cross attention all replicated 16x over `model`. Padding "
+         "20->32 heads shards attention 16-ways at 1.6x padded flops: "
+         "predict the memory term (dominated by replicated (B,S,S) "
+         "attention traffic) drops ~8x and compute/chip drops ~10x.",
+         {"attn_pad_heads": True}),
+        ("pad_heads+dots",
+         "Compose head padding with the lighter remat policy (judged on "
+         "raw terms; see cell C note on CSE).",
+         {"attn_pad_heads": True, "remat": "dots"}),
+    ]),
+    # E: generalization check — the OTHER collective-bound decode cell must
+    # be fixed by the same knobs found in cell B
+    ("E", "llava-next-mistral-7b", "decode_32k", [
+        ("grouped_kv",
+         "llava (mistral backbone, kv=8 < TP16) shows the same "
+         "collective-bound decode pathology as cell B (1.38 s/step of "
+         "collectives from the kv-expand of a sequence-sharded cache). The "
+         "cell-B fix must transfer: predict collective term -99%+ and "
+         "memory toward the cache read floor.",
+         {"decode_grouped": True, "decode_slim_mask": True}),
+    ]),
+]
+
+
+def _raw_terms(rec):
+    return rec["roofline"]
+
+
+def _deltas(base, after):
+    return {k: (after[k] / base[k] - 1.0) * 100.0
+            for k in ("compute_s", "memory_s", "collective_s")
+            if base.get(k, 0) > 0}
+
+
+def run_plan(cell_id: str):
+    plan = next(p for p in PLANS if p[0] == cell_id)
+    _, arch, shape_name, steps = plan
+    shape = SHAPES[shape_name]
+    base_rec = dryrun.run_cell(arch, shape_name, "single_pod")
+    base = base_rec["calibrated"]["roofline"]
+    base_raw = _raw_terms(base_rec)
+    log = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "baseline": base, "baseline_raw": base_raw, "iterations": []}
+    print(f"[{cell_id}] baseline {arch} x {shape_name}: "
+          f"c/m/x = {base['compute_s']:.3e}/{base['memory_s']:.3e}/"
+          f"{base['collective_s']:.3e} bound={base['bottleneck']}")
+    for tag, hypothesis, overrides in steps:
+        run = RunConfig(seq_len=shape.seq_len,
+                        global_batch=shape.global_batch, **overrides)
+        rec = dryrun.run_cell(arch, shape_name, "single_pod", run=run,
+                              tag=tag, force=False)
+        if "error" in rec:
+            log["iterations"].append({"tag": tag, "hypothesis": hypothesis,
+                                      "error": rec["error"]})
+            print(f"[{cell_id}/{tag}] FAILED: {rec['error']}")
+            continue
+        after = rec["calibrated"]["roofline"]
+        after_raw = _raw_terms(rec)
+        deltas = _deltas(base, after)
+        deltas_raw = _deltas(base_raw, after_raw)
+        dom = base["bottleneck"] + "_s"
+        # remat-style changes are CSE'd away in the unrolled calibration
+        # variants: judge those on the raw scanned terms instead
+        use_raw = "remat" in str(overrides)
+        dd = deltas_raw if use_raw else deltas
+        dom_delta = dd.get(dom, 0.0)
+        verdict = "confirmed" if dom_delta < -5.0 else (
+            "partial" if dom_delta < 0 else "refuted")
+        log["iterations"].append({
+            "tag": tag, "hypothesis": hypothesis, "overrides": overrides,
+            "after": after, "after_raw": after_raw, "delta_pct": deltas,
+            "delta_raw_pct": deltas_raw, "judged_on":
+                "raw" if use_raw else "calibrated",
+            "dominant_term_delta_pct": dom_delta, "verdict": verdict,
+        })
+        print(f"[{cell_id}/{tag}] c/m/x = {after['compute_s']:.3e}/"
+              f"{after['memory_s']:.3e}/{after['collective_s']:.3e} "
+              f"dominant({base['bottleneck']}) {dom_delta:+.1f}% "
+              f"-> {verdict}")
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    (PERF_DIR / f"cell_{cell_id}.json").write_text(json.dumps(log, indent=1))
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all", choices=["A", "B", "C", "D", "E", "all"])
+    args = ap.parse_args()
+    cells = ["A", "B", "C", "D", "E"] if args.cell == "all" else [args.cell]
+    for c in cells:
+        run_plan(c)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,268 @@
+"""Shared model components: param declaration, norms, rope, attention.
+
+Params are declared via ``ParamDef`` trees so that a single declaration yields
+(a) materialized weights, (b) logical sharding axes, and (c) eval_shape-only
+abstract params for the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones
+    scale: float = 1.0                # stddev multiplier for normal
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(rng: jax.Array, defs: PyTree, dtype=jnp.float32) -> PyTree:
+    """Materialize a ParamDef tree into weights (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(key, d: ParamDef):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        fan_in = d.shape[0] if d.shape else 1
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, dtype) * std).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs: PyTree, dtype=jnp.float32) -> PyTree:
+    """ShapeDtypeStruct tree for dry-runs (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def)
+
+
+def param_axes(defs: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def stack_defs(defs: PyTree, n: int, axis_name: Optional[str] = None) -> PyTree:
+    """Prepend a layer axis to every def (for lax.scan over layers)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs, is_leaf=_is_def)
+
+
+def init_stacked(rng: jax.Array, defs: PyTree, n: int, dtype=jnp.float32) -> PyTree:
+    """Materialize per-layer weights and stack along axis 0."""
+    keys = jax.random.split(rng, n)
+    return jax.vmap(lambda k: init_params(k, defs, dtype))(keys)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                   # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs         # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (pure-JAX; the Pallas kernels in repro.kernels are the TPU path)
+# ---------------------------------------------------------------------------
+
+def _scale(head_dim: int) -> float:
+    return 1.0 / math.sqrt(head_dim)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  q_offset: Any = 0,
+                  window: int = 0,
+                  attn_softcap: float = 0.0,
+                  kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped-query attention, full-materialization path.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). q_offset: scalar or (B,) absolute
+    position of q[0] (for decode). window>0 -> sliding-window (local) mask.
+    kv_len: (B,) valid kv length mask (for decode caches).
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qh = q.reshape(B, Sq, Hkv, g, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * _scale(D)
+    logits = softcap(logits, attn_softcap)
+    q_pos = (jnp.asarray(q_offset).reshape(-1, 1) + jnp.arange(Sq)[None])  # (B|1, Sq)
+    k_pos = jnp.arange(Sk)[None]                                           # (1, Sk)
+    mask = jnp.ones((q_pos.shape[0], Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
+    # window may be a traced per-layer scalar (scan over mixed local/global
+    # layers); 0 means global.
+    w = jnp.asarray(window)
+    mask &= jnp.where(w > 0, q_pos[:, :, None] - k_pos[:, None, :] < w, True)
+    if kv_len is not None:
+        mask &= k_pos[:, None, :] < kv_len.reshape(-1, 1, 1)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True,
+                      window: int = 0,
+                      attn_softcap: float = 0.0,
+                      chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention (memory O(Sq*chunk)).
+
+    Used for long-sequence prefill/train where the (Sq, Sk) score matrix would
+    not fit HBM. Scans over kv chunks carrying (acc, row_max, row_sum).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Sk % chunk:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Sk_p = Sk + pad
+    else:
+        Sk_p = Sk
+    n_chunks = Sk_p // chunk
+    g = Hq // Hkv
+    qh = (q.astype(jnp.float32) * _scale(D)).reshape(B, Sq, Hkv, g, D)
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D)
+    q_pos = jnp.arange(Sq)
+
+    def step(carry, xs):
+        acc, m, s = carry
+        kb, vb, ci = xs
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kb.astype(jnp.float32))
+        logits = softcap(logits, attn_softcap)
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] < Sk
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        w = jnp.asarray(window)
+        mask = mask & jnp.where(w > 0, q_pos[:, None] - k_pos[None, :] < w, True)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, s_new), None
+
+    acc0 = jnp.zeros((B, Hkv, g, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, g, Sq), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    (acc, m, s), _ = jax.lax.scan(
+        step, (acc0, m0, s0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(s[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+              chunk_threshold: int = 8192) -> jax.Array:
+    """Dispatch: full path for short seqs, chunked online-softmax for long."""
+    if q.shape[1] >= chunk_threshold or k.shape[1] > chunk_threshold:
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 attn_softcap=attn_softcap)
+    return gqa_attention(q, k, v, causal=causal, window=window,
+                         attn_softcap=attn_softcap)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None,
+                 z_loss: float = 1e-4) -> jax.Array:
+    """Mean cross-entropy over valid positions, with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return loss.mean()
+    mask = mask.astype(jnp.float32)
+    return (loss * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def scan_or_unroll(use_scan: bool, f, init, xs):
+    """jax.lax.scan, or a python unroll when use_scan=False.
+
+    The unrolled form exists for the dry-run *calibration* path: XLA's
+    cost_analysis counts a while-loop body once regardless of trip count, so
+    per-layer roofline costs are measured from small unrolled variants and
+    extrapolated to full depth (see repro.launch.dryrun).
+    """
+    if use_scan:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(0, d, 2)[None]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)

@@ -1,0 +1,151 @@
+"""Hymba: parallel attention + Mamba heads in every block.
+
+Both paths read the same normed input; their normalized outputs are averaged
+(β-weighted fusion in the paper; β learned here as per-path RMS gains).
+Most attention layers are sliding-window; one in every ``global_every`` is
+global — expressed as a per-layer window array so a single scanned block body
+serves all layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import lm as lm_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (ParamDef, init_params, init_stacked,
+                                 rms_norm, scan_or_unroll, softmax_xent,
+                                 stack_defs)
+
+PyTree = Any
+
+
+def block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), ("embed",), "zeros"),
+        "ln2": ParamDef((d,), ("embed",), "zeros"),
+        "attn": lm_lib.attn_defs(cfg),
+        "mamba": ssm_lib.mamba_defs(cfg),
+        "fuse_a": ParamDef((d,), ("embed",), "zeros"),
+        "fuse_m": ParamDef((d,), ("embed",), "zeros"),
+        "mlp": lm_lib.mlp_defs(cfg),
+    }
+
+
+def full_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"lm": lm_lib.lm_defs(cfg),
+            "blocks": stack_defs(block_defs(cfg), cfg.n_layers, "layers")}
+
+
+def init(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    r1, r2 = jax.random.split(rng)
+    return {"lm": init_params(r1, lm_lib.lm_defs(cfg), dtype),
+            "blocks": init_stacked(r2, block_defs(cfg), cfg.n_layers, dtype)}
+
+
+def apply_block(p, cfg: ModelConfig, run: RunConfig, x, *, window,
+                cache=None, pos=None):
+    """cache: dict(k, v, ssm, conv) or None."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    a, new_attn = lm_lib._attn_apply(p["attn"], cfg, h, window=window,
+                                     cache=attn_cache, pos=pos, run=run)
+    mamba_state = None if cache is None else (cache["ssm"], cache["conv"])
+    m, new_mamba = ssm_lib.mamba_mix(p["mamba"], cfg, h, mamba_state)
+    fused = 0.5 * (rms_norm(a, p["fuse_a"], cfg.norm_eps) +
+                   rms_norm(m, p["fuse_m"], cfg.norm_eps))
+    x = x + fused
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + lm_lib._mlp_apply(p["mlp"], cfg, h2)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": new_attn["k"], "v": new_attn["v"],
+                     "ssm": new_mamba[0], "conv": new_mamba[1]}
+    return x, new_cache
+
+
+def forward_train(params, cfg: ModelConfig, run: RunConfig, batch,
+                  mesh=None, batch_axes=("data",)):
+    x = params["lm"]["embed"][batch["tokens"]].astype(run.compute_dtype)
+    windows = jnp.asarray(lm_lib.layer_windows(cfg))
+
+    def body(x, xs):
+        p_l, w_l = xs
+        x, _ = apply_block(p_l, cfg, run, x, window=w_l)
+        return x, None
+
+    fn = body
+    if run.remat != "none":
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = scan_or_unroll(run.scan_layers, fn, x, (params["blocks"], windows))
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm"]["lm_head"].astype(x.dtype)) \
+        if not cfg.tie_embeddings else \
+        jnp.einsum("bsd,vd->bsv", x, params["lm"]["embed"].astype(x.dtype))
+    return logits, jnp.float32(0.0)
+
+
+def train_loss(params, cfg, run, batch, mesh=None, batch_axes=("data",)):
+    logits, _ = forward_train(params, cfg, run, batch, mesh, batch_axes)
+    return softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> Dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    di, N = ssm_lib.d_inner(cfg), cfg.ssm_state
+    L = cfg.n_layers
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+        (lambda s, dt: jnp.zeros(s, dt))
+    return {"k": mk((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "v": mk((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "ssm": mk((L, batch, di, N), jnp.float32),
+            "conv": mk((L, batch, cfg.conv_width - 1, di), dtype)}
+
+
+def prefill(params, cfg: ModelConfig, run: RunConfig, cache, tokens,
+            mesh=None, batch_axes=("data",), extra=None):
+    """Full-prompt pass writing KV caches + SSM states. tokens: (B, S)."""
+    B, S = tokens.shape
+    x = params["lm"]["embed"][tokens].astype(run.compute_dtype)
+    windows = jnp.asarray(lm_lib.layer_windows(cfg))
+    pos0 = jnp.zeros((B,), jnp.int32)
+
+    def body(x, xs):
+        p_l, w_l, cache_l = xs
+        x, new_cache_l = apply_block(p_l, cfg, run, x, window=w_l,
+                                     cache=cache_l, pos=pos0)
+        return x, new_cache_l
+
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["blocks"], windows, cache))
+    x = rms_norm(x[:, -1:], params["lm"]["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm"]["lm_head"].astype(x.dtype)) \
+        if not cfg.tie_embeddings else \
+        jnp.einsum("bsd,vd->bsv", x, params["lm"]["embed"].astype(x.dtype))
+    return logits[:, 0], new_cache, jnp.full((B,), S, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, cache, token, pos,
+                mesh=None, batch_axes=("data",)):
+    x = params["lm"]["embed"][token[:, None]].astype(run.compute_dtype)
+    windows = jnp.asarray(lm_lib.layer_windows(cfg))
+
+    def body(x, xs):
+        p_l, w_l, cache_l = xs
+        x, new_cache_l = apply_block(p_l, cfg, run, x, window=w_l,
+                                     cache=cache_l, pos=pos)
+        return x, new_cache_l
+
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["blocks"], windows, cache))
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm"]["lm_head"].astype(x.dtype)) \
+        if not cfg.tie_embeddings else \
+        jnp.einsum("bsd,vd->bsv", x, params["lm"]["embed"].astype(x.dtype))
+    return logits[:, 0], new_cache

@@ -1,0 +1,509 @@
+"""Generic decoder-only LM stack: dense / MoE / VLM families.
+
+Layers are stacked and executed with ``lax.scan`` (one compiled block body →
+small HLO, fast multi-pod compiles). Heterogeneous layer patterns (gemma2
+local/global alternation, hymba global-every-k) are expressed as a per-layer
+``window`` array scanned alongside the stacked params, so the block body stays
+homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import moe as moe_lib
+from repro.models.common import (ParamDef, act_fn, apply_rope, attention,
+                                 gqa_attention, init_params, init_stacked,
+                                 rms_norm, scan_or_unroll, softcap,
+                                 softmax_xent)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter declarations
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs.update({
+            "bq": ParamDef((cfg.n_heads, hd), ("heads", "head_dim"), "zeros"),
+            "bk": ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), "zeros"),
+            "bv": ParamDef((cfg.n_kv_heads, hd), ("kv_heads", "head_dim"), "zeros"),
+        })
+    return defs
+
+
+def mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, ff), ("embed", "mlp")),
+        "w_up": ParamDef((d, ff), ("embed", "mlp")),
+        "w_down": ParamDef((ff, d), ("mlp", "embed")),
+    }
+
+
+def block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"ln1": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+                            "attn": attn_defs(cfg)}
+    if not cfg.parallel_block:
+        defs["ln2"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+    if cfg.post_norm:
+        defs["pn1"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+        defs["pn2"] = ParamDef((cfg.d_model,), ("embed",), "zeros")
+    if cfg.family == "moe":
+        defs["moe"] = moe_lib.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg)
+    return defs
+
+
+def lm_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs = {"embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed")),
+            "final_norm": ParamDef((d,), ("embed",), "zeros")}
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.n_image_tokens:
+        # stub multimodal projector (patch-embed -> d_model), applied to the
+        # precomputed patch embeddings supplied by input_specs()
+        defs["mm_proj"] = ParamDef((d, d), ("embed", None))
+    return defs
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer sliding window (0 = global attention)."""
+    w = np.zeros((cfg.n_layers,), np.int32)
+    if cfg.layer_pattern == "local_global" and cfg.local_window:
+        w[0::2] = cfg.local_window           # even layers local (gemma2)
+    elif cfg.global_every and cfg.local_window:
+        w[:] = cfg.local_window              # hymba: local everywhere ...
+        w[0::cfg.global_every] = 0           # ... except every k-th global
+    return w
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """Repeat kv heads to the q-head count.
+
+    The XLA path always computes attention in MHA form: identical FLOPs to the
+    grouped form, but sharding then follows a single q-heads rule (kv stays
+    grouped only inside the KV *cache*, where the memory matters). The Pallas
+    kernels keep the grouped form.
+    """
+    g = n_heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def _pallas_ok(run: Optional[RunConfig], q, window) -> bool:
+    """Use the flash kernel when enabled and the shapes fit its blocks.
+
+    On non-TPU backends the kernel runs in interpret mode — only sensible
+    for tiny test shapes, so restrict to TPU unless the problem is small.
+    """
+    if run is None or not run.use_pallas or isinstance(window, jax.Array):
+        return False
+    B, S = q.shape[0], q.shape[1]
+    if S % 128 and S % 64:
+        return False
+    if jax.default_backend() == "tpu":
+        return True
+    return B * S <= 4096          # interpret-mode (tests/examples) only
+
+
+def attention_with_knobs(q, ke, ve, *, n_heads: int, causal=True, window=0,
+                         attn_softcap=0.0, run: Optional[RunConfig] = None,
+                         mesh=None, batch_axes=("data",),
+                         pre_resharded: bool = False):
+    """Full-seq attention with the §Perf sharding knobs.
+
+    ke/ve are already expanded to q-heads. Two mutually-useful strategies for
+    archs whose heads don't divide TP:
+      * attn_pad_heads: pad heads to a TP multiple -> shard over `model`,
+        zero reshard collectives, pad/Hq wasted flops;
+      * attn_batch_reshard (`pre_resharded`): caller spread the batch over
+        (batch_axes + model); attention is pure-DP; reshard back after.
+
+    With ``run.use_pallas`` the flash-attention Pallas kernel replaces the
+    XLA einsum path (TPU; interpret mode for small test shapes elsewhere).
+    """
+    pad_heads = (run is not None and run.attn_pad_heads and mesh is not None
+                 and "model" in getattr(mesh, "axis_names", ()))
+    if pad_heads:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+        target = -(-n_heads // tp) * tp
+        if target != n_heads:
+            padw = ((0, 0), (0, 0), (0, target - n_heads), (0, 0))
+            q, ke, ve = (jnp.pad(t, padw) for t in (q, ke, ve))
+        spec = NamedSharding(
+            mesh, P(tuple(batch_axes) or None, None, "model", None))
+        q, ke, ve = (jax.lax.with_sharding_constraint(t, spec)
+                     for t in (q, ke, ve))
+    if _pallas_ok(run, q, window):
+        from repro.kernels.flash_attention.kernel import flash_attention
+        block = 128 if q.shape[1] % 128 == 0 else 64
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), ke.transpose(0, 2, 1, 3),
+            ve.transpose(0, 2, 1, 3), causal=causal, window=int(window),
+            softcap=attn_softcap, block_q=block, block_k=block,
+            interpret=jax.default_backend() != "tpu",
+        ).transpose(0, 2, 1, 3)
+    else:
+        out = attention(q, ke, ve, causal=causal, window=window,
+                        attn_softcap=attn_softcap)
+    if pad_heads:
+        out = out[:, :, :n_heads]
+    if pre_resharded:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        back = NamedSharding(mesh, P(tuple(batch_axes), None, None, None))
+        out = jax.lax.with_sharding_constraint(out, back)
+    return out
+
+
+def _attn_apply(p, cfg: ModelConfig, x, *, window, cache=None, pos=None,
+                run: Optional[RunConfig] = None, mesh=None,
+                batch_axes=("data",)):
+    """x: (B, S, d). cache: dict(k,v) (B, Smax, Hkv, hd) or None.
+
+    Returns (out (B,S,d), new_cache).
+    """
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+
+    # §Perf knob: when heads don't divide TP (attention would replicate over
+    # `model`), spread the *batch* over (batch_axes + model) just for the
+    # attention op — pure DP attention, two reshards per layer.
+    reshard = (run is not None and run.attn_batch_reshard and mesh is not None
+               and cache is None)
+    if reshard:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = tuple(batch_axes) + ("model",)
+        spread = NamedSharding(mesh, P(axes, None, None, None))
+        q, k, v = (jax.lax.with_sharding_constraint(t, spread)
+                   for t in (q, k, v))
+
+    if cache is None:
+        # train/prefill-from-scratch: positions 0..S
+        positions = jnp.arange(S)[None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = attention_with_knobs(
+            q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads),
+            n_heads=cfg.n_heads, causal=True, window=window,
+            attn_softcap=cfg.attn_softcap, run=run, mesh=mesh,
+            batch_axes=batch_axes, pre_resharded=reshard)
+        new_cache = None
+    elif S > 1:
+        # prefill: full-seq attention, write K/V into cache positions [0, S)
+        positions = jnp.arange(S)[None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        out = attention(q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads),
+                        causal=True, window=window,
+                        attn_softcap=cfg.attn_softcap)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        # decode: S == 1, write at per-sequence position `pos`.
+        # The write is a broadcast-compare-select rather than a scatter: an
+        # elementwise update keeps every dim of the cache shardable under
+        # SPMD (a dynamic scatter into a sequence-sharded cache would force
+        # an all-gather).
+        positions = pos[:, None] + jnp.arange(S)[None]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        write = (jnp.arange(cache["k"].shape[1])[None, :, None, None]
+                 == pos[:, None, None, None])
+        ck = jnp.where(write, k[:, :1].astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(write, v[:, :1].astype(cache["v"].dtype), cache["v"])
+        if run is not None and run.decode_cache_anchor and mesh is not None:
+            # §Perf knob: anchor the updated cache to its input sharding so
+            # SPMD reshards the (tiny) broadcast operand instead of
+            # all-gathering the whole sequence-sharded cache.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.configs.base import ShapeConfig
+            from repro.distributed import sharding as shlib
+            sh = shlib.cache_shardings(
+                cfg, mesh, ShapeConfig("t", "decode", cache["k"].shape[1], B))
+            inner = NamedSharding(mesh, P(*sh["k"].spec[1:]))
+            ck = jax.lax.with_sharding_constraint(ck, inner)
+            cv = jax.lax.with_sharding_constraint(cv, inner)
+        # §Perf knob: for S==1 the kv_len mask (k_pos < pos+1) is exactly the
+        # causal mask — skip the redundant (B, S_cache) causal compare
+        causal = not (run is not None and run.decode_slim_mask and S == 1)
+        if run is not None and run.decode_grouped:
+            # §Perf knob: grouped-query form reads the KV cache once instead
+            # of q_per_kv times (no materialized expansion)
+            out = gqa_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                                causal=causal, q_offset=pos, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                kv_len=pos + S)
+        else:
+            out = gqa_attention(q, _expand_kv(ck.astype(x.dtype), cfg.n_heads),
+                                _expand_kv(cv.astype(x.dtype), cfg.n_heads),
+                                causal=causal, q_offset=pos, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                kv_len=pos + S)
+        new_cache = {"k": ck, "v": cv}
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def _mlp_apply(p, cfg: ModelConfig, x):
+    act = act_fn(cfg.act)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))) * \
+        jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+def apply_block(p, cfg: ModelConfig, run: RunConfig, x, *, window,
+                mesh=None, batch_axes=("data",), cache=None, pos=None):
+    """One transformer block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.parallel_block:
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, new_cache = _attn_apply(p["attn"], cfg, h, window=window,
+                                   cache=cache, pos=pos, run=run, mesh=mesh,
+                                   batch_axes=batch_axes)
+        if cfg.family == "moe":
+            m, aux = moe_lib.moe_apply(h, p["moe"], cfg, run, mesh, batch_axes)
+        else:
+            m = _mlp_apply(p["mlp"], cfg, h)
+        x = x + a + m
+        return x, new_cache, aux
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = _attn_apply(p["attn"], cfg, h, window=window,
+                               cache=cache, pos=pos, run=run, mesh=mesh,
+                               batch_axes=batch_axes)
+    if cfg.post_norm:
+        a = rms_norm(a, p["pn1"], cfg.norm_eps)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = moe_lib.moe_apply(h, p["moe"], cfg, run, mesh, batch_axes)
+    else:
+        m = _mlp_apply(p["mlp"], cfg, h)
+    if cfg.post_norm:
+        m = rms_norm(m, p["pn2"], cfg.norm_eps)
+    x = x + m
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def full_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.models.common import stack_defs
+    return {"lm": lm_defs(cfg),
+            "blocks": stack_defs(block_defs(cfg), cfg.n_layers, "layers")}
+
+
+def init(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    r1, r2 = jax.random.split(rng)
+    return {"lm": init_params(r1, lm_defs(cfg), dtype),
+            "blocks": init_stacked(r2, block_defs(cfg), cfg.n_layers, dtype)}
+
+
+def _embed(params, cfg: ModelConfig, run: RunConfig, batch):
+    emb = params["lm"]["embed"]
+    x = emb[batch["tokens"]].astype(run.compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        img = jnp.einsum("bsd,de->bse", batch["image_embeds"].astype(x.dtype),
+                         params["lm"]["mm_proj"].astype(x.dtype))
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    emb = params["lm"]["embed"]
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, emb.astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm"]["lm_head"].astype(x.dtype))
+    return softcap(logits, cfg.logit_softcap)
+
+
+def forward_train(params, cfg: ModelConfig, run: RunConfig, batch,
+                  mesh=None, batch_axes=("data",)):
+    """Full-sequence forward. batch: tokens (B,S[,image_embeds…]).
+
+    Returns (logits (B,S,V), aux_loss).
+    """
+    x = _embed(params, cfg, run, batch)
+    win_np = layer_windows(cfg)
+    homogeneous = bool((win_np == 0).all())   # static window enables kernels
+    windows = jnp.asarray(win_np)
+
+    def body(x, xs):
+        p_l, w_l = xs
+        x, _, aux = apply_block(p_l, cfg, run, x,
+                                window=0 if homogeneous else w_l, mesh=mesh,
+                                batch_axes=batch_axes)
+        return x, aux
+
+    if run.scan_layers:
+        block_fn = body
+        if run.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if run.remat == "dots" else
+                      jax.checkpoint_policies.nothing_saveable)
+            block_fn = jax.checkpoint(body, policy=policy)
+        x, auxs = jax.lax.scan(block_fn, x, (params["blocks"], windows))
+        aux = auxs.sum()
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            p_l = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            x, a = body(x, (p_l, windows[i]))
+            aux = aux + a
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), aux
+
+
+def train_loss(params, cfg: ModelConfig, run: RunConfig, batch,
+               mesh=None, batch_axes=("data",)):
+    logits, aux = forward_train(params, cfg, run, batch, mesh, batch_axes)
+    labels = batch["labels"]
+    if cfg.n_image_tokens and "image_embeds" in batch:
+        logits = logits[:, cfg.n_image_tokens:]
+    mask = batch.get("loss_mask")
+    return softmax_xent(logits, labels, mask) + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> PyTree:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, cache, token, pos,
+                mesh=None, batch_axes=("data",)):
+    """One decode step. token: (B,) int32; pos: (B,) int32 current lengths.
+
+    Returns (logits (B,V), new_cache).
+    """
+    batch = {"tokens": token[:, None]}
+    x = _embed(params, cfg, run, batch)
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        p_l, w_l, cache_l = xs
+        x, new_cache_l, _ = apply_block(p_l, cfg, run, x, window=w_l,
+                                        mesh=mesh, batch_axes=batch_axes,
+                                        cache=cache_l, pos=pos)
+        return x, new_cache_l
+
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["blocks"], windows, cache))
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, run: RunConfig, cache, tokens,
+            mesh=None, batch_axes=("data",), extra=None):
+    """Fill cache positions [0, S) and return last-position logits.
+
+    tokens: (B, S). Returns (logits (B,V), cache, lengths (B,)).
+    """
+    B, S = tokens.shape
+    batch = {"tokens": tokens}
+    if extra:
+        batch.update(extra)
+    x = _embed(params, cfg, run, batch)
+    win_np = layer_windows(cfg)
+    homogeneous = bool((win_np == 0).all())
+    windows = jnp.asarray(win_np)
+
+    def body(x, xs):
+        p_l, w_l, cache_l = xs
+        x, new_cache_l, _ = _prefill_block(p_l, cfg, run, x,
+                                           0 if homogeneous else w_l,
+                                           cache_l, mesh, batch_axes)
+        return x, new_cache_l
+
+    # cache length = embedded length (vlm: image tokens prepended to text)
+    emb_len = x.shape[1]
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["blocks"], windows, cache))
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits[:, 0], new_cache, jnp.full((B,), emb_len, jnp.int32)
+
+
+def _prefill_block(p, cfg, run, x, window, cache_l, mesh, batch_axes):
+    """Block application that also writes the full-seq K/V into the cache."""
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["attn"]["bq"].astype(h.dtype)
+        k = k + p["attn"]["bk"].astype(h.dtype)
+        v = v + p["attn"]["bv"].astype(h.dtype)
+    positions = jnp.arange(S)[None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention(q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads),
+                    causal=True, window=window, attn_softcap=cfg.attn_softcap)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], k.astype(cache_l["k"].dtype), 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], v.astype(cache_l["v"].dtype), 0, axis=1)
+    a = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(h.dtype))
+    if cfg.post_norm:
+        a = rms_norm(a, p["pn1"], cfg.norm_eps)
+    if cfg.parallel_block:
+        if cfg.family == "moe":
+            m, _ = moe_lib.moe_apply(h, p["moe"], cfg, run, mesh, batch_axes)
+        else:
+            m = _mlp_apply(p["mlp"], cfg, h)
+        return x + a + m, {"k": ck, "v": cv}, None
+    x = x + a
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        m, _ = moe_lib.moe_apply(h2, p["moe"], cfg, run, mesh, batch_axes)
+    else:
+        m = _mlp_apply(p["mlp"], cfg, h2)
+    if cfg.post_norm:
+        m = rms_norm(m, p["pn2"], cfg.norm_eps)
+    return x + m, {"k": ck, "v": cv}, None

@@ -1,0 +1,152 @@
+"""Uniform model interface: init / train_loss / prefill / decode_step / specs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins for every input of the lowered step — the dry-run lowers against
+these without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import hymba as hymba_lib
+from repro.models import lm as lm_lib
+from repro.models import whisper as whisper_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.common import abstract_params, param_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[..., PyTree]
+    full_defs: Callable[[], PyTree]
+    train_loss: Callable[..., jax.Array]
+    init_cache: Callable[..., PyTree]
+    prefill: Optional[Callable[..., Any]]
+    decode_step: Callable[..., Any]
+
+    def abstract_params(self, dtype=jnp.float32) -> PyTree:
+        return abstract_params(self.full_defs(), dtype)
+
+    def axes(self) -> PyTree:
+        return param_axes(self.full_defs())
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam == "ssm":
+        lib = xlstm_lib
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng, dtype=jnp.float32: lib.init(rng, cfg, dtype),
+            full_defs=lambda: lib.full_defs(cfg),
+            train_loss=lambda p, run, batch, **kw: lib.train_loss(p, cfg, run, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16, abstract=False:
+                lib.init_cache(cfg, batch, max_seq, dtype, abstract),
+            prefill=lambda p, run, cache, tokens, **kw:
+                lib.prefill(p, cfg, run, cache, tokens, **kw),
+            decode_step=lambda p, run, cache, token, pos, **kw:
+                lib.decode_step(p, cfg, run, cache, token, pos, **kw),
+        )
+    if fam == "hybrid":
+        lib = hymba_lib
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng, dtype=jnp.float32: lib.init(rng, cfg, dtype),
+            full_defs=lambda: lib.full_defs(cfg),
+            train_loss=lambda p, run, batch, **kw: lib.train_loss(p, cfg, run, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16, abstract=False:
+                lib.init_cache(cfg, batch, max_seq, dtype, abstract),
+            prefill=lambda p, run, cache, tokens, **kw:
+                lib.prefill(p, cfg, run, cache, tokens, **kw),
+            decode_step=lambda p, run, cache, token, pos, **kw:
+                lib.decode_step(p, cfg, run, cache, token, pos, **kw),
+        )
+    if fam == "audio":
+        lib = whisper_lib
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda rng, dtype=jnp.float32: lib.init(rng, cfg, dtype),
+            full_defs=lambda: lib.full_defs(cfg),
+            train_loss=lambda p, run, batch, **kw: lib.train_loss(p, cfg, run, batch, **kw),
+            init_cache=lambda batch, max_seq, dtype=jnp.bfloat16, abstract=False:
+                lib.init_cache(cfg, batch, max_seq, dtype, abstract),
+            prefill=lambda p, run, cache, tokens, **kw:
+                lib.prefill(p, cfg, run, cache, tokens, **kw),
+            decode_step=lambda p, run, cache, token, pos, **kw:
+                lib.decode_step(p, cfg, run, cache, token, pos, **kw),
+        )
+    # dense / moe / vlm
+    lib = lm_lib
+
+    def _cache(batch, max_seq, dtype=jnp.bfloat16, abstract=False):
+        return (lib.abstract_cache if abstract else lib.init_cache)(
+            cfg, batch, max_seq, dtype)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda rng, dtype=jnp.float32: lib.init(rng, cfg, dtype),
+        full_defs=lambda: lib.full_defs(cfg),
+        train_loss=lambda p, run, batch, **kw: lib.train_loss(p, cfg, run, batch, **kw),
+        init_cache=_cache,
+        prefill=lambda p, run, cache, tokens, **kw:
+            lib.prefill(p, cfg, run, cache, tokens, **kw),
+        decode_step=lambda p, run, cache, token, pos, **kw:
+            lib.decode_step(p, cfg, run, cache, token, pos, **kw),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                compute_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the lowered step's data inputs.
+
+    train/prefill: token batch (+ stub modality embeddings).
+    decode: one new token + per-seq position + the KV cache/state.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            s_text = S - cfg.n_image_tokens
+            batch["tokens"] = tok((B, s_text))
+            batch["labels"] = tok((B, s_text))
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), compute_dtype)
+        elif cfg.family == "audio":
+            batch["tokens"] = tok((B, S))
+            batch["labels"] = tok((B, S))
+            batch["audio_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), compute_dtype)
+        else:
+            batch["tokens"] = tok((B, S))
+            batch["labels"] = tok((B, S))
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        spec: Dict[str, Any] = {"tokens": tok((B, S))}
+        if cfg.family == "vlm":
+            spec["tokens"] = tok((B, S - cfg.n_image_tokens))
+            spec["extra"] = {"image_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), compute_dtype)}
+        if cfg.family == "audio":
+            spec["extra"] = {"audio_embeds": jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), compute_dtype)}
+        return spec
+
+    # decode: one token with a cache of S
+    from repro.models.registry import get_model  # self-import ok
+    bundle = get_model(cfg)
+    cache = bundle.init_cache(B, S, abstract=True)
+    return {"cache": cache, "token": tok((B,)), "pos": tok((B,))}

@@ -1,0 +1,119 @@
+"""Selective state-space (Mamba/S6) layer, chunked for TPU.
+
+The selective scan is computed chunk-by-chunk under ``lax.scan`` (carrying the
+(B, di, N) hidden state) with an associative scan *inside* each chunk — the
+standard TPU adaptation: bounded VMEM working set, MXU-aligned chunk matmuls,
+linear-time overall.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef
+
+PyTree = Any
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n = cfg.d_model, d_inner(cfg), cfg.ssm_state
+    return {
+        "w_in": ParamDef((d, 2 * di), ("embed", "inner")),
+        "conv": ParamDef((cfg.conv_width, di), (None, "inner")),
+        "w_bcdt": ParamDef((di, 2 * n + 1), ("inner", None)),
+        "dt_bias": ParamDef((di,), ("inner",), "zeros"),
+        "a_log": ParamDef((di, n), ("inner", None), "ones"),
+        "d_skip": ParamDef((di,), ("inner",), "ones"),
+        "w_out": ParamDef((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):]
+
+
+def selective_scan(u, dt, A, Bc, Cc, h0, chunk: int = 256):
+    """u: (B,S,di); dt: (B,S,di); A: (di,N); Bc,Cc: (B,S,N); h0: (B,di,N).
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t u_t) B_t ;  y_t = h_t · C_t.
+    Returns (y (B,S,di), h_final).
+    """
+    B, S, di = u.shape
+    N = A.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    uc = u.reshape(B, nc, chunk, di).swapaxes(0, 1)
+    dtc = dt.reshape(B, nc, chunk, di).swapaxes(0, 1)
+    Bcc = Bc.reshape(B, nc, chunk, N).swapaxes(0, 1)
+    Ccc = Cc.reshape(B, nc, chunk, N).swapaxes(0, 1)
+
+    def chunk_step(h, xs):
+        ub, dtb, Bb, Cb = xs                       # (B,L,di), (B,L,N)
+        da = jnp.exp(dtb[..., None] * A)           # (B,L,di,N) decay
+        bx = (dtb * ub)[..., None] * Bb[:, :, None, :]   # (B,L,di,N)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (da, bx), axis=1)
+        hs = a_cum * h[:, None] + b_cum            # (B,L,di,N)
+        y = jnp.einsum("bldn,bln->bld", hs, Cb)
+        return hs[:, -1], y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (uc, dtc, Bcc, Ccc))
+    y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
+    return y, h_fin
+
+
+def mamba_mix(p, cfg: ModelConfig, h, state=None):
+    """Mamba mixer on normed input h: (B,S,d).
+
+    state: (ssm_h (B,di,N) f32, conv (B,W-1,di)) or None.
+    Returns (y (B,S,d), new_state).
+    """
+    B, S, _ = h.shape
+    di, N = d_inner(cfg), cfg.ssm_state
+    up = jnp.einsum("bsd,de->bse", h, p["w_in"].astype(h.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_state = state[1] if state is not None else None
+    xc, new_conv = _causal_conv(xi, p["conv"].astype(h.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    bcdt = jnp.einsum("bsi,ik->bsk", xc, p["w_bcdt"].astype(h.dtype))
+    Bc = bcdt[..., :N].astype(jnp.float32)
+    Cc = bcdt[..., N:2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(bcdt[..., 2 * N].astype(jnp.float32)[..., None]
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = state[0] if state is not None else jnp.zeros((B, di, N), jnp.float32)
+    if S == 1 and state is not None:
+        da = jnp.exp(dt[:, 0, :, None] * A)
+        hs = da * h0 + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * Bc[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", hs, Cc[:, 0])[:, None]
+        h_fin = hs
+    else:
+        y, h_fin = selective_scan(xc.astype(jnp.float32), dt, A, Bc, Cc, h0)
+    y = y.astype(h.dtype) + xc * p["d_skip"].astype(h.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(h.dtype)), \
+        (h_fin, new_conv)

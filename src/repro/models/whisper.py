@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone (conv mel frontend is a STUB).
+
+``input_specs()`` supplies precomputed frame embeddings (B, encoder_seq, d) —
+the product of the (stubbed) conv1d mel frontend. Positions are sinusoidal.
+Decoder = causal self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.common import (ParamDef, act_fn, attention, init_params,
+                                 init_stacked, rms_norm, scan_or_unroll,
+                                 sinusoidal_positions, softmax_xent,
+                                 stack_defs)
+from repro.models.lm import _expand_kv, _mlp_apply, attention_with_knobs, \
+    mlp_defs
+
+PyTree = Any
+
+
+def _proj_defs(cfg: ModelConfig, n_kv: int) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((d, n_kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def enc_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "attn": _proj_defs(cfg, cfg.n_kv_heads),
+            "ln2": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "mlp": mlp_defs(cfg)}
+
+
+def dec_block_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "self_attn": _proj_defs(cfg, cfg.n_kv_heads),
+            "ln_x": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "cross_attn": _proj_defs(cfg, cfg.n_kv_heads),
+            "ln2": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "mlp": mlp_defs(cfg)}
+
+
+def full_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed")),
+        "lm_head": ParamDef((d, cfg.vocab_size), ("embed", "vocab")),
+        "final_norm": ParamDef((d,), ("embed",), "zeros"),
+        "enc_norm": ParamDef((d,), ("embed",), "zeros"),
+        "enc": stack_defs(enc_block_defs(cfg), cfg.n_encoder_layers, "layers"),
+        "dec": stack_defs(dec_block_defs(cfg), cfg.n_layers, "layers"),
+    }
+
+
+def init(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    top = {k: v for k, v in full_defs(cfg).items() if k not in ("enc", "dec")}
+    out = init_params(r1, top, dtype)
+    out["enc"] = init_stacked(r2, enc_block_defs(cfg), cfg.n_encoder_layers, dtype)
+    out["dec"] = init_stacked(r3, dec_block_defs(cfg), cfg.n_layers, dtype)
+    return out
+
+
+def _proj_qkv(p, cfg, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xq.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xq.dtype))
+    return q, _expand_kv(k, cfg.n_heads), _expand_kv(v, cfg.n_heads)
+
+
+def encode(params, cfg: ModelConfig, run: RunConfig, audio_embeds,
+           mesh=None, batch_axes=("data",)):
+    """audio_embeds: (B, S_enc, d) from the stub frontend."""
+    x = audio_embeds.astype(run.compute_dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _proj_qkv(p["attn"], cfg, h, h)
+        a = attention_with_knobs(q, k, v, n_heads=cfg.n_heads, causal=False,
+                                 run=run, mesh=mesh, batch_axes=batch_axes)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"].astype(x.dtype))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + _mlp_apply(p["mlp"], cfg, h), None
+
+    x, _ = scan_or_unroll(run.scan_layers, body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p, cfg, run, x, enc_out=None, cache=None, pos=None,
+               mesh=None, batch_axes=("data",)):
+    """Decoder block; cache: dict(k,v,ck,cv) (cross kv precomputed) or None."""
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wq"].astype(h.dtype))
+    kh = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wk"].astype(h.dtype))
+    vh = jnp.einsum("bsd,dhk->bshk", h, p["self_attn"]["wv"].astype(h.dtype))
+    if cache is None:
+        a = attention_with_knobs(q, _expand_kv(kh, cfg.n_heads),
+                                 _expand_kv(vh, cfg.n_heads),
+                                 n_heads=cfg.n_heads, causal=True,
+                                 run=run, mesh=mesh, batch_axes=batch_axes)
+        new_cache = None
+    else:
+        positions = pos[:, None] + jnp.arange(S)[None]
+        write = (jnp.arange(cache["k"].shape[1])[None, :, None, None]
+                 == pos[:, None, None, None])
+        ck = jnp.where(write, kh[:, :1].astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(write, vh[:, :1].astype(cache["v"].dtype), cache["v"])
+        from repro.models.common import gqa_attention
+        a = gqa_attention(q, _expand_kv(ck.astype(h.dtype), cfg.n_heads),
+                          _expand_kv(cv.astype(h.dtype), cfg.n_heads),
+                          causal=True, q_offset=pos, kv_len=pos + S)
+        new_cache = {"k": ck, "v": cv}
+    x = x + jnp.einsum("bshk,hkd->bsd", a, p["self_attn"]["wo"].astype(x.dtype))
+    # cross attention
+    h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    qx = jnp.einsum("bsd,dhk->bshk", h, p["cross_attn"]["wq"].astype(h.dtype))
+    if cache is None:
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wk"].astype(h.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross_attn"]["wv"].astype(h.dtype))
+    else:
+        kx, vx = cache["ck"].astype(h.dtype), cache["cv"].astype(h.dtype)
+        new_cache.update({"ck": cache["ck"], "cv": cache["cv"]})
+    if cache is None:
+        ax = attention_with_knobs(qx, _expand_kv(kx, cfg.n_heads),
+                                  _expand_kv(vx, cfg.n_heads),
+                                  n_heads=cfg.n_heads, causal=False,
+                                  run=run, mesh=mesh, batch_axes=batch_axes)
+    else:
+        ax = attention(qx, _expand_kv(kx, cfg.n_heads),
+                       _expand_kv(vx, cfg.n_heads), causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", ax, p["cross_attn"]["wo"].astype(x.dtype))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp_apply(p["mlp"], cfg, h), new_cache
+
+
+def forward_train(params, cfg: ModelConfig, run: RunConfig, batch,
+                  mesh=None, batch_axes=("data",)):
+    """batch: audio_embeds (B,S_enc,d), tokens (B,S_dec), labels (B,S_dec)."""
+    enc_out = encode(params, cfg, run, batch["audio_embeds"], mesh, batch_axes)
+    x = params["embed"][batch["tokens"]].astype(run.compute_dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, p):
+        x, _ = _dec_block(p, cfg, run, x, enc_out=enc_out, mesh=mesh,
+                          batch_axes=batch_axes)
+        return x, None
+
+    fn = body
+    if run.remat != "none":
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = scan_or_unroll(run.scan_layers, fn, x, params["dec"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, jnp.float32(0.0)
+
+
+def train_loss(params, cfg, run, batch, mesh=None, batch_axes=("data",)):
+    logits, _ = forward_train(params, cfg, run, batch, mesh, batch_axes)
+    return softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> Dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+        (lambda s, dt: jnp.zeros(s, dt))
+    return {"k": mk((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "v": mk((L, batch, max_seq, cfg.n_kv_heads, hd), dtype),
+            "ck": mk((L, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype),
+            "cv": mk((L, batch, cfg.encoder_seq, cfg.n_kv_heads, hd), dtype)}
+
+
+def prefill(params, cfg: ModelConfig, run: RunConfig, cache, tokens,
+            mesh=None, batch_axes=("data",), extra=None):
+    """Encode audio + run the decoder prompt, writing self- and cross-KV.
+
+    extra: {"audio_embeds": (B, S_enc, d)}.
+    """
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, run, extra["audio_embeds"])
+    x = params["embed"][tokens].astype(run.compute_dtype)
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        # precompute cross kv for this layer
+        kx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p_l["cross_attn"]["wk"].astype(x.dtype))
+        vx = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p_l["cross_attn"]["wv"].astype(x.dtype))
+        cache_l = dict(cache_l, ck=kx.astype(cache_l["ck"].dtype),
+                       cv=vx.astype(cache_l["cv"].dtype))
+        # self-attn over full prompt, writing cache at [0, S)
+        h = rms_norm(x, p_l["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p_l["self_attn"]["wq"].astype(h.dtype))
+        kh = jnp.einsum("bsd,dhk->bshk", h, p_l["self_attn"]["wk"].astype(h.dtype))
+        vh = jnp.einsum("bsd,dhk->bshk", h, p_l["self_attn"]["wv"].astype(h.dtype))
+        a = attention(q, _expand_kv(kh, cfg.n_heads),
+                      _expand_kv(vh, cfg.n_heads), causal=True)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], kh.astype(cache_l["k"].dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], vh.astype(cache_l["v"].dtype), 0, axis=1)
+        x2 = x + jnp.einsum("bshk,hkd->bsd", a,
+                            p_l["self_attn"]["wo"].astype(x.dtype))
+        h2 = rms_norm(x2, p_l["ln_x"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h2,
+                        p_l["cross_attn"]["wq"].astype(h2.dtype))
+        ax = attention(qx, _expand_kv(kx, cfg.n_heads),
+                       _expand_kv(vx, cfg.n_heads), causal=False)
+        x2 = x2 + jnp.einsum("bshk,hkd->bsd", ax,
+                             p_l["cross_attn"]["wo"].astype(x2.dtype))
+        h3 = rms_norm(x2, p_l["ln2"], cfg.norm_eps)
+        x2 = x2 + _mlp_apply(p_l["mlp"], cfg, h3)
+        return x2, dict(k=ck, v=cv, ck=cache_l["ck"], cv=cache_l["cv"])
+
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["dec"], cache))
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], new_cache, jnp.full((B,), S, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, cache, token, pos,
+                mesh=None, batch_axes=("data",)):
+    x = params["embed"][token[:, None]].astype(run.compute_dtype)
+    # per-position sinusoid
+    sin_table = sinusoidal_positions(cache["k"].shape[2], cfg.d_model)
+    x = x + sin_table[pos][:, None].astype(x.dtype)
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        x, new_cache_l = _dec_block(p_l, cfg, run, x, cache=cache_l, pos=pos)
+        return x, new_cache_l
+
+    x, new_cache = scan_or_unroll(run.scan_layers, body, x,
+                                  (params["dec"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], new_cache

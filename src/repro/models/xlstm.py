@@ -1,0 +1,376 @@
+"""xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory).
+
+TPU adaptation: the mLSTM is computed in *chunkwise-parallel* form — within a
+chunk a masked attention-like matmul (MXU-friendly), across chunks a
+`lax.scan` carrying the stabilized (C, n, m) state — giving O(S·L_c) compute
+instead of the O(S^2) fully-parallel form. The sLSTM has a true sequential
+dependency (recurrent gate matmuls) and runs as a per-timestep scan, exactly
+as the paper concedes.
+
+State is stabilized in log space: the carried (C̄, n̄) have the running max m
+factored out (true C = C̄·e^m), matching the paper's Appendix stabilization.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.common import (ParamDef, init_params, rms_norm,
+                                 softmax_xent)
+
+PyTree = Any
+
+NEG = -1e30
+
+
+def _d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, h = cfg.d_model, _d_inner(cfg), cfg.mlstm_heads
+    dh = di // h
+    return {
+        "ln": ParamDef((d,), ("embed",), "zeros"),
+        "w_up": ParamDef((d, 2 * di), ("embed", "inner")),
+        "conv": ParamDef((cfg.conv_width, di), (None, "inner")),
+        "wq": ParamDef((di, h, dh), ("inner", None, None)),
+        "wk": ParamDef((di, h, dh), ("inner", None, None)),
+        "wv": ParamDef((di, h, dh), ("inner", None, None)),
+        "w_if": ParamDef((di, h, 2), ("inner", None, None), scale=0.1),
+        "b_if": ParamDef((h, 2), (None, None), "zeros"),
+        "gn": ParamDef((di,), ("inner",), "zeros"),
+        "w_down": ParamDef((di, d), ("inner", "embed")),
+    }
+
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.mlstm_heads
+    dh = d // h
+    return {
+        "ln": ParamDef((d,), ("embed",), "zeros"),
+        "wx": ParamDef((d, h, 4, dh), ("embed", None, None, None)),
+        "wr": ParamDef((h, dh, 4, dh), (None, None, None, None), scale=0.5),
+        "b": ParamDef((h, 4, dh), (None, None, None), "zeros"),
+        "wz_gate": ParamDef((d, d), ("embed", None)),
+        "gn": ParamDef((d,), ("embed",), "zeros"),
+        "w_down": ParamDef((d, d), ("embed", "embed")),
+    }
+
+
+def is_slstm(cfg: ModelConfig, i: int) -> bool:
+    return bool(cfg.slstm_every) and (i % cfg.slstm_every == 0)
+
+
+def full_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+        "blocks": [slstm_defs(cfg) if is_slstm(cfg, i) else mlstm_defs(cfg)
+                   for i in range(cfg.n_layers)],
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"))
+    return defs
+
+
+def init(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> PyTree:
+    return init_params(rng, full_defs(cfg), dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x: (B,S,di); w: (W,di). Depthwise causal conv. Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):] if W > 1 else state
+
+
+def mlstm_chunk_scan(q, k, v, lf, li, state, chunk: int = 256):
+    """Chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,S,dh); lf: (B,H,S) log-forget (<=0); li: (B,H,S) log-input.
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) with true C = C̄·e^m.
+    Returns (h (B,H,S,dh), new_state).
+    """
+    B, H, S, dh = q.shape
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=NEG)
+    Sp = S + pad
+    nc = Sp // chunk
+    rs = lambda a: a.reshape(B, H, nc, chunk, *a.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+    # -> (nc, B, H, chunk, ...)
+    # scale q once so intra-chunk AND carried-state terms are consistent
+    qs, ks, vs = rs(q * dh ** -0.5), rs(k), rs(v)
+    lfs = lf.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    lis = li.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    def step(carry, xs):
+        C, n, m = carry          # C: (B,H,dh,dh) with true value C*e^m
+        qc, kc, vc, lfc, lic = xs
+        F = jnp.cumsum(lfc, axis=-1)                       # (B,H,L)
+        # log weight of input j as seen at position i: F_i - F_j + li_j
+        dlog = F[..., :, None] - F[..., None, :] + lic[..., None, :]
+        iidx = jnp.arange(chunk)
+        dlog = jnp.where(iidx[:, None] >= iidx[None, :], dlog, NEG)
+        state_log = F + m[..., None]                       # (B,H,L)
+        m_i = jnp.maximum(dlog.max(-1), state_log)
+        m_i = jnp.maximum(m_i, -40.0)                      # avoid -inf carries
+        w = jnp.exp(dlog - m_i[..., None])                 # (B,H,L,L)
+        sqk = jnp.einsum("bhid,bhjd->bhij", qc, kc)
+        num_intra = jnp.einsum("bhij,bhjd->bhid", w * sqk, vc)
+        den_intra = jnp.einsum("bhij,bhij->bhi", w, sqk)
+        sfac = jnp.exp(state_log - m_i)                    # (B,H,L)
+        num_state = jnp.einsum("bhid,bhde->bhie", qc, C) * sfac[..., None]
+        den_state = jnp.einsum("bhid,bhd->bhi", qc, n) * sfac
+        num = num_intra + num_state
+        den = den_intra + den_state
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # end-of-chunk state
+        FL = F[..., -1:]                                   # (B,H,1)
+        m_new = jnp.maximum(FL[..., 0] + m,
+                            (FL - F + lic).max(-1))
+        m_new = jnp.maximum(m_new, -40.0)
+        wL = jnp.exp(FL - F + lic - m_new[..., None])      # (B,H,L)
+        C_new = jnp.exp(FL[..., 0] + m - m_new)[..., None, None] * C + \
+            jnp.einsum("bhj,bhjd,bhje->bhde", wL, kc, vc)
+        n_new = jnp.exp(FL[..., 0] + m - m_new)[..., None] * n + \
+            jnp.einsum("bhj,bhjd->bhd", wL, kc)
+        return (C_new, n_new, m_new), h
+
+    state2, hs = jax.lax.scan(step, state, (qs, ks, vs, lfs, lis))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, Sp, dh)[:, :, :S]
+    return h, state2
+
+
+def mlstm_decode_cell(q, k, v, lf, li, state):
+    """Single-token mLSTM update. q,k,v: (B,H,dh); lf,li: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    fprime = jnp.exp(lf + m - m_new)
+    iprime = jnp.exp(li - m_new)
+    C_new = fprime[..., None, None] * C + \
+        iprime[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = fprime[..., None] * n + iprime[..., None] * k
+    scale = q.shape[-1] ** -0.5
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q * scale, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def _mlstm_qkvg(p, cfg, h, conv_state=None):
+    """Shared projections. h: (B,S,d) normed input."""
+    B, S, _ = h.shape
+    di, H = _d_inner(cfg), cfg.mlstm_heads
+    dh = di // H
+    up = jnp.einsum("bsd,de->bse", h, p["w_up"].astype(h.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = _causal_conv(xm, p["conv"].astype(h.dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bsi,ihd->bhsd", xc, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsi,ihd->bhsd", xc, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsi,ihd->bhsd", xm, p["wv"].astype(h.dtype))
+    gates = jnp.einsum("bsi,ihg->bhsg", xm, p["w_if"].astype(h.dtype)) + \
+        p["b_if"].astype(h.dtype)[None, :, None, :]
+    li = gates[..., 0].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(gates[..., 1].astype(jnp.float32) + 3.0)
+    return q, k, v, lf, li, z, new_conv
+
+
+def _mlstm_out(p, cfg, hcell, z, x):
+    """hcell: (B,H,S,dh) -> residual output."""
+    B, H, S, dh = hcell.shape
+    hflat = hcell.transpose(0, 2, 1, 3).reshape(B, S, H * dh)
+    hflat = rms_norm(hflat.astype(z.dtype), p["gn"], cfg.norm_eps)
+    y = hflat * jax.nn.silu(z)
+    return x + jnp.einsum("bsi,id->bsd", y, p["w_down"].astype(z.dtype))
+
+
+def mlstm_block(p, cfg: ModelConfig, x, state=None):
+    """x: (B,S,d). state: (C,n,m,conv) or None (train). Returns (x, state)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    conv_state = state[3] if state is not None else None
+    q, k, v, lf, li, z, new_conv = _mlstm_qkvg(p, cfg, h, conv_state)
+    B = x.shape[0]
+    H = cfg.mlstm_heads
+    dh = _d_inner(cfg) // H
+    if state is None:
+        s0 = (jnp.zeros((B, H, dh, dh), jnp.float32),
+              jnp.zeros((B, H, dh), jnp.float32),
+              jnp.full((B, H), -40.0, jnp.float32))
+        hcell, s_fin = mlstm_chunk_scan(q.astype(jnp.float32),
+                                        k.astype(jnp.float32),
+                                        v.astype(jnp.float32), lf, li, s0)
+        return _mlstm_out(p, cfg, hcell.astype(x.dtype), z, x), \
+            (s_fin[0], s_fin[1], s_fin[2], new_conv)
+    C, n, m = state[0], state[1], state[2]
+    hc, (C2, n2, m2) = mlstm_decode_cell(
+        q[:, :, 0].astype(jnp.float32), k[:, :, 0].astype(jnp.float32),
+        v[:, :, 0].astype(jnp.float32), lf[:, :, 0], li[:, :, 0], (C, n, m))
+    hcell = hc[:, :, None, :]
+    y = _mlstm_out(p, cfg, hcell.astype(x.dtype), z, x)
+    return y, (C2, n2, m2, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential scan
+# ---------------------------------------------------------------------------
+
+def slstm_cell(p, cfg, xt, state):
+    """One sLSTM step. xt: (B,H,4,dh) pre-activations from W·x_t.
+
+    state: (c, n, h, m) each (B,H,dh).
+    """
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,hdge->bhge", h, p["wr"].astype(h.dtype))
+    pre = xt + rec + p["b"].astype(h.dtype)[None]
+    zt = jnp.tanh(pre[:, :, 0].astype(jnp.float32))
+    it = pre[:, :, 1].astype(jnp.float32)
+    ft = jax.nn.log_sigmoid(pre[:, :, 2].astype(jnp.float32) + 3.0)
+    ot = jax.nn.sigmoid(pre[:, :, 3].astype(jnp.float32))
+    m_new = jnp.maximum(ft + m, it)
+    iprime = jnp.exp(it - m_new)
+    fprime = jnp.exp(ft + m - m_new)
+    c_new = fprime * c + iprime * zt
+    n_new = fprime * n + iprime
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new.astype(h.dtype), m_new), h_new
+
+
+def slstm_block(p, cfg: ModelConfig, x, state=None):
+    """x: (B,S,d). Returns (x_out, state)."""
+    B, S, d = x.shape
+    H = cfg.mlstm_heads
+    dh = d // H
+    hin = rms_norm(x, p["ln"], cfg.norm_eps)
+    xw = jnp.einsum("bsd,dhge->bshge", hin, p["wx"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", hin, p["wz_gate"].astype(x.dtype))
+    if state is None:
+        zero = jnp.zeros((B, H, dh), jnp.float32)
+        state = (zero, zero, jnp.zeros((B, H, dh), x.dtype),
+                 jnp.full((B, H, dh), -40.0, jnp.float32))
+
+    def step(carry, xt):
+        carry, h = slstm_cell(p, cfg, xt, carry)
+        return carry, h
+
+    state2, hs = jax.lax.scan(step, state, xw.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)   # (B,S,H,dh)->(B,S,d)
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    y = x + jnp.einsum("bsd,de->bse", hs, p["w_down"].astype(x.dtype))
+    return y, state2
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, run: RunConfig, batch,
+                  mesh=None, batch_axes=("data",)):
+    x = params["embed"][batch["tokens"]].astype(run.compute_dtype)
+    for i in range(cfg.n_layers):
+        p = params["blocks"][i]
+        blk = slstm_block if is_slstm(cfg, i) else mlstm_block
+        if run.remat != "none":
+            x, _ = jax.checkpoint(lambda p_, x_, b=blk: b(p_, cfg, x_))(p, x)
+        else:
+            x, _ = blk(p, cfg, x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, jnp.float32(0.0)
+
+
+def train_loss(params, cfg, run, batch, mesh=None, batch_axes=("data",)):
+    logits, _ = forward_train(params, cfg, run, batch, mesh, batch_axes)
+    return softmax_xent(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               abstract: bool = False) -> List:
+    """Recurrent state per layer (no KV pages — O(1) in seq length)."""
+    di, H = _d_inner(cfg), cfg.mlstm_heads
+    dh_m = di // H
+    dh_s = cfg.d_model // H
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else \
+        (lambda s, dt: jnp.zeros(s, dt))
+    cache = []
+    for i in range(cfg.n_layers):
+        if is_slstm(cfg, i):
+            cache.append((mk((batch, H, dh_s), jnp.float32),
+                          mk((batch, H, dh_s), jnp.float32),
+                          mk((batch, H, dh_s), dtype),
+                          mk((batch, H, dh_s), jnp.float32)))
+        else:
+            cache.append((mk((batch, H, dh_m, dh_m), jnp.float32),
+                          mk((batch, H, dh_m), jnp.float32),
+                          mk((batch, H), jnp.float32),
+                          mk((batch, cfg.conv_width - 1, di), dtype)))
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, run: RunConfig, cache, tokens,
+            mesh=None, batch_axes=("data",), extra=None):
+    """Process the prompt, returning last-token logits + recurrent states."""
+    del cache  # states are created fresh (O(1) in prompt length)
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(run.compute_dtype)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        p = params["blocks"][i]
+        blk = slstm_block if is_slstm(cfg, i) else mlstm_block
+        x, st = blk(p, cfg, x)
+        new_cache.append(st)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], new_cache, jnp.full((B,), S, jnp.int32)
+
+
+def decode_step(params, cfg: ModelConfig, run: RunConfig, cache, token, pos,
+                mesh=None, batch_axes=("data",)):
+    x = params["embed"][token[:, None]].astype(run.compute_dtype)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        p = params["blocks"][i]
+        if is_slstm(cfg, i):
+            B, S, d = x.shape
+            H, dh = cfg.mlstm_heads, cfg.d_model // cfg.mlstm_heads
+            hin = rms_norm(x, p["ln"], cfg.norm_eps)
+            xw = jnp.einsum("bsd,dhge->bshge", hin, p["wx"].astype(x.dtype))
+            z = jnp.einsum("bsd,de->bse", hin, p["wz_gate"].astype(x.dtype))
+            st, h = slstm_cell(p, cfg, xw[:, 0], cache[i])
+            hs = h.reshape(B, 1, d).astype(x.dtype)
+            hs = rms_norm(hs, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+            x = x + jnp.einsum("bsd,de->bse", hs, p["w_down"].astype(x.dtype))
+            new_cache.append(st)
+        else:
+            x, st = mlstm_block(p, cfg, x, cache[i])
+            new_cache.append(st)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], new_cache

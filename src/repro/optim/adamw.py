@@ -1,0 +1,78 @@
+"""AdamW + gradient clipping + schedules, in plain JAX pytrees.
+
+(No optax in this environment — the optimizer is part of the substrate.)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # ()
+    mu: PyTree           # first moment
+    nu: PyTree           # second moment
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(grads: PyTree, state: AdamWState, params: PyTree, *,
+           lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+           eps: float = 1e-8, weight_decay: float = 0.1
+           ) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m.astype(v.dtype), v
+
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    m_leaves = treedef.flatten_up_to(state.mu)
+    v_leaves = treedef.flatten_up_to(state.nu)
+    p_leaves = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p
+           in zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+    unflat = lambda i: jax.tree_util.tree_unflatten(treedef,
+                                                    [t[i] for t in out])
+    return unflat(0), AdamWState(step, unflat(1), unflat(2))
+
+
+def cosine_schedule(step: jax.Array, *, base_lr: float, warmup: int,
+                    total: int, min_ratio: float = 0.1) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

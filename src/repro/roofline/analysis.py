@@ -1,0 +1,87 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+TPU v5e-class hardware constants (per the assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI link bandwidth: ~50 GB/s per link
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per-chip, seconds)
+  memory term     = HLO_bytes / HBM_bw                (per-chip, seconds)
+  collective term = collective_bytes / link_bw        (per-chip, seconds)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (already
+per-partition under SPMD). collective_bytes is parsed from the partitioned
+HLO text: the summed operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes / s / chip
+ICI_BW = 50e9              # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(...)
+#       ROOT %t = (f32[8]{0}, f32[8]{0}) all-to-all(...)
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes per collective kind from partitioned HLO."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = {"compute_s": "compute", "memory_s": "memory",
+             "collective_s": "collective"}[dom]
+    total = max(compute_s, memory_s, collective_s)
+    terms.update({
+        "bottleneck": bound,
+        "step_time_lower_bound_s": total,
+        # fraction of the step the *compute* roofline would occupy if the
+        # dominant term were fully overlapped == achievable MFU bound
+        "roofline_fraction": compute_s / total if total > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(n_params: int, n_tokens: int, kind: str = "train") -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params * n_tokens

@@ -1,0 +1,88 @@
+"""Dense GQA LM running over a paged KV pool with the Pallas kernel.
+
+The real-model backend of the serving engine: decode reads/writes the
+(L, P, Hkv, page, d) page pools through page tables, attention runs the
+``repro.kernels.paged_attention`` kernel (interpret mode off-TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.models import lm as lm_lib
+from repro.models.common import apply_rope, rms_norm, softcap
+
+
+def init_pools(cfg: ModelConfig, n_pages: int, page_size: int,
+               dtype=jnp.float32) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "run", "page_size"))
+def paged_decode_step(params, cfg: ModelConfig, run: RunConfig,
+                      pools, token, pos, page_table, *, page_size: int):
+    """token/pos: (B,); page_table: (B, n_slots). Returns (logits, pools).
+
+    pos is the index of the *new* token; attention covers [0, pos].
+    """
+    assert not cfg.parallel_block, "paged_lm: sequential blocks only"
+    B = token.shape[0]
+    interp = jax.default_backend() != "tpu"
+    x = params["lm"]["embed"][token[:, None]].astype(run.compute_dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pid = page_table[jnp.arange(B), pos // page_size]     # (B,)
+    off = pos % page_size
+    lengths = pos + 1
+    windows = lm_lib.layer_windows(cfg)
+    new_k, new_v = pools["k"], pools["v"]
+    for li in range(cfg.n_layers):
+        p = jax.tree_util.tree_map(lambda a: a[li], params["blocks"])
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"].astype(h.dtype))
+        if cfg.qkv_bias:
+            q = q + p["attn"]["bq"].astype(h.dtype)
+            k = k + p["attn"]["bk"].astype(h.dtype)
+            v = v + p["attn"]["bv"].astype(h.dtype)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        # write the new token's k/v into the pools
+        new_k = new_k.at[li, pid, :, off, :].set(
+            k[:, 0].astype(new_k.dtype))
+        new_v = new_v.at[li, pid, :, off, :].set(
+            v[:, 0].astype(new_v.dtype))
+        a = paged_attention(q[:, 0].astype(jnp.float32),
+                            new_k[li].astype(jnp.float32),
+                            new_v[li].astype(jnp.float32),
+                            page_table, lengths, softcap=cfg.attn_softcap,
+                            interpret=interp)
+        a = a[:, None].astype(h.dtype)
+        attn_out = jnp.einsum("bshk,hkd->bsd",
+                              a.reshape(B, 1, cfg.n_heads, -1),
+                              p["attn"]["wo"].astype(h.dtype))
+        if cfg.post_norm:
+            attn_out = rms_norm(attn_out, p["pn1"], cfg.norm_eps)
+        x = x + attn_out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        m = lm_lib._mlp_apply(p["mlp"], cfg, h2)
+        if cfg.post_norm:
+            m = rms_norm(m, p["pn2"], cfg.norm_eps)
+        x = x + m
+    x = rms_norm(x, params["lm"]["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["lm"]["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["lm"]["lm_head"].astype(x.dtype))
+    return softcap(logits[:, 0], cfg.logit_softcap), \
+        {"k": new_k, "v": new_v}

@@ -1,0 +1,168 @@
+"""Jittable train / prefill / decode steps with full sharding annotations.
+
+``build_train_step`` returns (step_fn, in_shardings, out_shardings) suitable
+both for real execution and for the AOT dry-run (.lower on ShapeDtypeStructs).
+The train step is the full production step: loss, grad, clip, AdamW update,
+optional microbatch gradient accumulation, optional top-k gradient
+compression with error feedback, optional ZeRO-1 optimizer-state sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.models.registry import ModelBundle, get_model, input_specs
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def _zero1_shardings(params_sh: PyTree, abstract: PyTree, mesh: Mesh) -> PyTree:
+    """ZeRO-1: additionally shard optimizer moments over ``data`` along the
+    largest dim that is unsharded and divisible."""
+    data = shlib.mesh_axis_size(mesh, "data")
+
+    def opt_sh(sh: NamedSharding, av) -> NamedSharding:
+        spec = list(sh.spec) + [None] * (len(av.shape) - len(sh.spec))
+        best, best_size = -1, 0
+        for i, (s, n) in enumerate(zip(spec, av.shape)):
+            if s is None and n % data == 0 and n > best_size:
+                best, best_size = i, n
+        if best >= 0 and best_size >= data:
+            spec[best] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(opt_sh, params_sh, abstract)
+
+
+def _topk_compress(g: jax.Array, err: jax.Array, ratio: float):
+    """Top-k sparsification with error feedback. Returns (g_hat, new_err)."""
+    if g.ndim < 2:
+        return g, err
+    acc = g.astype(jnp.float32) + err
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    sent = jnp.where(mask, flat, 0.0)
+    return sent.reshape(g.shape).astype(g.dtype), (flat - sent).reshape(g.shape)
+
+
+def build_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                     shape: ShapeConfig):
+    """Returns (train_step, in_shardings, donate_argnums).
+
+    train_step(params, opt_state, err_state, batch, step)
+      -> (params, opt_state, err_state, metrics)
+    """
+    bundle = get_model(cfg)
+    baxes = shlib.batch_axes(mesh, shape.global_batch)
+    use_compress = run.grad_compression == "topk"
+
+    def loss_fn(params, batch):
+        return bundle.train_loss(params, run, batch, mesh=mesh,
+                                 batch_axes=baxes or ("data",))
+
+    def train_step(params, opt_state, err_state, batch, step):
+        if run.microbatch and run.microbatch < shape.global_batch:
+            n_micro = shape.global_batch // run.microbatch
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_micro, run.microbatch) + x.shape[1:]),
+                batch)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            loss = lsum / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if use_compress:
+            flat_g, tdef = jax.tree_util.tree_flatten(grads)
+            flat_e = tdef.flatten_up_to(err_state)
+            comp = [_topk_compress(g, e, run.topk_ratio)
+                    for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree_util.tree_unflatten(tdef, [c[0] for c in comp])
+            err_state = jax.tree_util.tree_unflatten(tdef, [c[1] for c in comp])
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, run.grad_clip)
+        lr = adamw.cosine_schedule(step, base_lr=run.lr,
+                                   warmup=run.warmup_steps,
+                                   total=run.total_steps)
+        params, opt_state = adamw.update(grads, opt_state, params, lr=lr,
+                                         weight_decay=run.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, err_state, metrics
+
+    # shardings
+    p_sh = shlib.param_shardings(bundle.axes(), cfg, mesh)
+    abstract = bundle.abstract_params()
+    if run.zero1:
+        opt_p_sh = _zero1_shardings(p_sh, abstract, mesh)
+    else:
+        opt_p_sh = p_sh
+    opt_sh = adamw.AdamWState(step=shlib.replicated(mesh), mu=opt_p_sh,
+                              nu=opt_p_sh)
+    err_sh = p_sh if use_compress else jax.tree_util.tree_map(
+        lambda _: shlib.replicated(mesh), jnp.zeros(()))
+    b_sh = shlib.batch_shardings(cfg, mesh, shape)
+    step_sh = shlib.replicated(mesh)
+    in_shardings = (p_sh, opt_sh, p_sh if use_compress else step_sh,
+                    b_sh, step_sh)
+    return train_step, in_shardings
+
+
+def build_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                       shape: ShapeConfig):
+    """prefill_step(params, tokens[, extra]) -> (logits, cache, lengths)."""
+    bundle = get_model(cfg)
+    baxes = shlib.batch_axes(mesh, shape.global_batch)
+    b = baxes if baxes else None
+
+    def prefill_step(params, tokens, extra=None):
+        if cfg.family == "ssm":
+            cache = None
+        else:
+            seq = shape.seq_len
+            cache = bundle.init_cache(shape.global_batch, seq)
+        return bundle.prefill(params, run, cache, tokens,
+                              mesh=mesh, batch_axes=baxes or ("data",),
+                              extra=extra)
+
+    p_sh = shlib.param_shardings(bundle.axes(), cfg, mesh)
+    tok_sh = NamedSharding(mesh, P(b, None))
+    in_sh = [p_sh, tok_sh]
+    if cfg.family in ("vlm", "audio"):
+        key = "image_embeds" if cfg.family == "vlm" else "audio_embeds"
+        in_sh.append({key: NamedSharding(mesh, P(b, None, None))})
+    return prefill_step, tuple(in_sh)
+
+
+def build_decode_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                      shape: ShapeConfig):
+    """serve_step(params, cache, token, pos) -> (logits, cache)."""
+    bundle = get_model(cfg)
+    baxes = shlib.batch_axes(mesh, shape.global_batch)
+    b = baxes if baxes else None
+
+    def serve_step(params, cache, token, pos):
+        return bundle.decode_step(params, run, cache, token, pos,
+                                  mesh=mesh, batch_axes=baxes or ("data",))
+
+    p_sh = shlib.param_shardings(bundle.axes(), cfg, mesh)
+    c_sh = shlib.cache_shardings(cfg, mesh, shape)
+    tok_sh = NamedSharding(mesh, P(b))
+    return serve_step, (p_sh, c_sh, tok_sh, tok_sh)

@@ -1,0 +1,60 @@
+"""Assigned-architecture configs: exact spec values + registry."""
+import pytest
+
+from repro.configs.base import LONG_CONTEXT_ARCHS, SHAPES, shape_cells
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+SPEC = {  # (layers, d_model, heads, kv, d_ff, vocab)
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+    "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_matches_assignment(arch):
+    c = get_config(arch)
+    L, d, h, kv, ff, v = SPEC[arch]
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.d_ff, c.vocab_size) == (L, d, h, kv, ff, v)
+
+
+def test_all_ten_archs_registered():
+    assert len(all_configs()) == 10
+
+
+def test_moe_details():
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert (l4.n_experts, l4.top_k) == (16, 1)
+    ms = get_config("moonshot-v1-16b-a3b")
+    assert (ms.n_experts, ms.top_k) == (64, 6)
+
+
+def test_param_counts_in_range():
+    assert 90e9 < get_config("command-r-plus-104b").n_params() < 120e9
+    assert 100e9 < get_config("qwen1.5-110b").n_params() < 125e9
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert 14e9 < l4.n_active_params() < 20e9
+    assert 90e9 < l4.n_params() < 120e9
+    assert 0.1e9 < get_config("xlstm-125m").n_params() < 0.2e9
+
+
+def test_long_context_rule():
+    """long_500k only for sub-quadratic archs (ssm/hybrid)."""
+    for arch in ARCH_IDS:
+        cells = shape_cells(arch)
+        assert ("long_500k" in cells) == (arch in LONG_CONTEXT_ARCHS)
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(cells)
+
+
+def test_shape_table():
+    assert SHAPES["train_4k"].tokens == 4096 * 256
+    assert SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["decode_32k"].kind == "decode"

@@ -1,0 +1,65 @@
+"""SMS-DASH deadline extension: accounting invariants + effectiveness."""
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+from repro.core.params import SimConfig
+
+
+def _setup(reqs=45):
+    cfg = SimConfig(n_cpu=4, n_gpu=2, n_channels=2, buf_entries=72,
+                    fifo_size=8, dcs_size=4)
+    mpki = np.array([30, 38, 25, 33, 1000, 1000], np.float32)
+    pool = {
+        "mpki": mpki, "inst_per_miss": np.maximum(1000 / mpki, 1),
+        "rbl": np.array([.5, .45, .6, .55, .9, .85], np.float32),
+        "blp": np.array([3, 4, 2, 5, 4, 4], np.int32),
+        "is_gpu": np.array([0, 0, 0, 0, 1, 0], bool),
+        "dl_period": np.array([0, 0, 0, 0, 0, 1000], np.int32),
+        "dl_reqs": np.array([0, 0, 0, 0, 0, reqs], np.int32),
+    }
+    return cfg, {k: v[None] for k, v in pool.items()}
+
+
+@pytest.fixture(scope="module")
+def dash_runs():
+    cfg, pb = _setup()
+    active = np.ones((1, cfg.n_src), bool)
+    return cfg, {pol: sim.simulate(cfg, pol, pb, active, 10_000, 2_000)
+                 for pol in ("sms", "sms_dash", "frfcfs")}
+
+
+def test_frame_accounting(dash_runs):
+    """met + missed == elapsed frames, and only for deadline sources."""
+    cfg, runs = dash_runs
+    for pol, m in runs.items():
+        frames = m["dl_met"][0] + m["dl_missed"][0]
+        assert frames[5] == 10, f"{pol}: {frames[5]} frames counted"
+        assert (frames[:5] == 0).all(), f"{pol}: non-deadline src counted"
+
+
+def test_dash_meets_more_deadlines(dash_runs):
+    cfg, runs = dash_runs
+    dash = int(runs["sms_dash"]["dl_met"][0, 5])
+    plain = int(runs["sms"]["dl_met"][0, 5])
+    fr = int(runs["frfcfs"]["dl_met"][0, 5])
+    assert dash > plain, (dash, plain)
+    assert dash > fr, (dash, fr)
+    assert dash >= 5, f"sms_dash met only {dash}/10"
+
+
+def test_dash_preserves_cpu_progress(dash_runs):
+    """Deadline enforcement must not collapse CPU throughput (<35% cost)."""
+    cfg, runs = dash_runs
+    cpu_dash = float(runs["sms_dash"]["ipc"][0, :4].mean())
+    cpu_sms = float(runs["sms"]["ipc"][0, :4].mean())
+    assert cpu_dash > 0.65 * cpu_sms
+
+
+def test_deadline_sources_respect_demand_cap():
+    """Accelerator emission is bounded by its per-frame demand."""
+    cfg, pb = _setup(reqs=20)
+    active = np.ones((1, cfg.n_src), bool)
+    m = sim.simulate(cfg, "sms_dash", pb, active, 10_000, 2_000)
+    # ~20 requests/frame demanded -> emission rate <= ~20/1000 cycles
+    assert float(m["mpkc"][0, 5]) <= 22.0

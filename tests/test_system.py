@@ -1,0 +1,67 @@
+"""End-to-end system behaviour: the paper's headline orderings hold.
+
+These are the reproduction's acceptance tests: on a contended heterogeneous
+workload, SMS must beat the centralized schedulers on fairness and system
+performance, while FR-FCFS must show the GPU-favoring unfairness the paper
+starts from.
+"""
+import numpy as np
+import pytest
+
+from repro.core import metrics as met
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+from repro.core.params import SimConfig
+
+CFG = SimConfig(n_cpu=4, n_channels=2, buf_entries=72, fifo_size=8,
+                dcs_size=4)
+CYCLES, WARMUP = 6_000, 800
+
+
+@pytest.fixture(scope="module")
+def contended_results():
+    wls = [w for w in wl.make_workloads(CFG.n_cpu, n_per_cat=3, seed=3)
+           if w.category in ("H", "HM", "HL")]
+    pool, active = wl.pool_batch(CFG, wls)
+    apool, aactive, amap = wl.alone_batch(CFG)
+    out = {}
+    for pol in sim.POLICIES:
+        am = sim.simulate(CFG, pol, apool, aactive, CYCLES, WARMUP)
+        alone = wl.alone_perf_lookup(CFG, am, amap)
+        m = sim.simulate(CFG, pol, pool, active, CYCLES, WARMUP)
+        perf = sim.perf_vector(CFG, m, pool)
+        rows = [met.workload_metrics(CFG, w, perf[i], alone)
+                for i, w in enumerate(wls)]
+        out[pol] = met.aggregate(rows)
+    return out
+
+
+def test_sms_best_fairness(contended_results):
+    r = contended_results
+    for pol in ("frfcfs", "atlas", "parbs", "tcm"):
+        assert r["sms"]["max_slowdown"] < r[pol]["max_slowdown"], \
+            f"SMS fairness not better than {pol}: {r}"
+
+
+def test_sms_best_system_performance(contended_results):
+    r = contended_results
+    for pol in ("frfcfs", "atlas", "parbs", "tcm"):
+        assert r["sms"]["weighted_speedup"] > r[pol]["weighted_speedup"], \
+            f"SMS weighted speedup not better than {pol}"
+
+
+def test_sms_cpu_speedup_over_tcm(contended_results):
+    r = contended_results
+    assert r["sms"]["cpu_weighted_speedup"] > \
+        r["tcm"]["cpu_weighted_speedup"]
+
+
+def test_sms_defends_cpus_vs_frfcfs(contended_results):
+    """FR-FCFS lets the high-RBL GPU crowd out CPUs relative to SMS."""
+    r = contended_results
+    assert r["sms"]["cpu_max_slowdown"] < r["frfcfs"]["cpu_max_slowdown"]
+
+
+def test_all_policies_make_progress(contended_results):
+    for pol, agg in contended_results.items():
+        assert agg["weighted_speedup"] > 0.5, f"{pol} made no progress"
