@@ -1,0 +1,18 @@
+# Tier-1 verification entry points. `make ci` is what the GitHub Actions
+# workflow runs: dev deps + the full suite, fail-fast.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test ci deps-dev quickstart
+
+deps-dev:
+	$(PY) -m pip install -r requirements-dev.txt
+
+test:
+	$(PY) -m pytest -x -q
+
+ci: deps-dev test
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -20,7 +20,14 @@ from repro.core import workloads as wl
 from repro.core.params import SimConfig
 
 EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "sim"
-POLICIES = ("frfcfs", "atlas", "parbs", "tcm", "sms")
+
+
+def __getattr__(name: str):
+    # Full registry sweep (live view: includes variants like sms_dash and
+    # any policy registered after import).
+    if name == "POLICIES":
+        return sim.ALL_POLICIES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def parity_config(n_cpu: int = 8, n_channels: int = 2, fifo_size: int = 6,

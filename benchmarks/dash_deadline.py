@@ -16,7 +16,8 @@ from benchmarks import common
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
 
-POLICIES = ("frfcfs", "tcm", "sms", "sms_dash")
+# squash_prio belongs here: its probabilistic boost is deadline-aware
+POLICIES = ("frfcfs", "tcm", "bliss", "squash_prio", "sms", "sms_dash")
 
 
 def build(n_channels: int = 2):

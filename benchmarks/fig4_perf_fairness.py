@@ -1,5 +1,7 @@
 """Fig 4: system performance (weighted speedup) + fairness (max slowdown)
-across the 7 workload categories, 105 workloads, 5 schedulers."""
+across the 7 workload categories, 105 workloads, and every policy in the
+registry (`simulator.ALL_POLICIES`) — the paper's 5 schedulers plus the
+registered extensions (sms_dash, bliss, squash_prio)."""
 from __future__ import annotations
 
 import time

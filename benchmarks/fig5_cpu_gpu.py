@@ -1,4 +1,5 @@
-"""Fig 5: CPU weighted speedup and GPU speedup, separately, by category."""
+"""Fig 5: CPU weighted speedup and GPU speedup, separately, by category,
+for every registered policy."""
 from __future__ import annotations
 
 import time

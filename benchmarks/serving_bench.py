@@ -11,9 +11,11 @@ import time
 
 from benchmarks import common
 from repro.serving.engine import EngineConfig, fairness_report
+from repro.serving.scheduler import SCHEDULERS
 from repro.serving.types import default_clients
 
-POLICIES = ("fcfs", "locality", "sms")
+# same enumeration mechanism as the cycle sim: the scheduler registry
+POLICIES = SCHEDULERS.names()
 
 
 def main(quick: bool = False):

@@ -1,3 +1,17 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Cycle-level heterogeneous memory-system simulator (the paper's system).
+
+Layout:
+  params      static DRAM timing + structure/policy knobs (`SimConfig`)
+  engine      shared machinery: sources, DRAM state, eligibility, issue
+  policy      the `MemoryPolicy` protocol + `Registry` (the scheduler API)
+  policies/   built-in registered policies, one module each
+              (frfcfs, atlas, parbs, tcm, sms, sms_dash, bliss, squash_prio)
+  schedulers  centralized CAM-buffer substrate (`CentralizedPolicy` base)
+  sms         the staged scheduler's three stages
+  simulator   scan/vmap drivers generic over any registered policy
+  workloads / metrics / power   figure-reproduction support
+
+Subpackages beside `core` host the other substrates (serving, kernels, ...);
+`repro.serving.scheduler` reuses `policy.Registry` so both domains enumerate
+schedulers the same way.
+"""

@@ -201,29 +201,34 @@ def eligibility(cfg: SimConfig, dram: Dict[str, Any], c: int,
     return valid & ok_bank & ok_faw & ok_bus, lat, is_hit
 
 
-def issue(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any], c: int,
-          do_issue: jax.Array, bank: jax.Array, row: jax.Array,
-          src: jax.Array, birth: jax.Array, lat: jax.Array,
-          is_hit: jax.Array, t: jax.Array):
-    """Commit one issue on channel c (scalars; no-op when do_issue=False)."""
+def issue_channels(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any],
+                   do_issue: jax.Array, bank: jax.Array, row: jax.Array,
+                   src: jax.Array, birth: jax.Array, lat: jax.Array,
+                   is_hit: jax.Array, t: jax.Array):
+    """Commit at most one issue per channel (all args (C,) vectors).
+
+    Per-channel DRAM rows are disjoint; the per-source scatters (ring, hits,
+    issued, sum_lat) use `.add`, which is exact for the integer-valued f32
+    accumulators involved, so channels commute.
+    """
     tm = cfg.timing
+    C = do_issue.shape[0]
+    cidx = jnp.arange(C)
     dram = dict(dram)
     st = dict(st)
-    done = t + lat + tm.t_burst
+    done = t + lat + tm.t_burst                                 # (C,)
     safe_bank = jnp.where(do_issue, bank, 0)
-    dram["bank_free"] = dram["bank_free"].at[c, safe_bank].set(
-        jnp.where(do_issue, done, dram["bank_free"][c, safe_bank]))
-    dram["open_row"] = dram["open_row"].at[c, safe_bank].set(
-        jnp.where(do_issue, row, dram["open_row"][c, safe_bank]))
-    dram["open_valid"] = dram["open_valid"].at[c, safe_bank].set(
-        jnp.where(do_issue, True, dram["open_valid"][c, safe_bank]))
-    # activate bookkeeping (tFAW): replace the oldest entry
+    wr_bank = lambda a, v: a.at[cidx, safe_bank].set(
+        jnp.where(do_issue, v, a[cidx, safe_bank]))
+    dram["bank_free"] = wr_bank(dram["bank_free"], done)
+    dram["open_row"] = wr_bank(dram["open_row"], row)
+    dram["open_valid"] = wr_bank(dram["open_valid"], True)
+    # activate bookkeeping (tFAW): replace the oldest entry per channel
     do_act = do_issue & ~is_hit
-    amin = jnp.argmin(dram["act_ring"][c])
-    dram["act_ring"] = dram["act_ring"].at[c, amin].set(
-        jnp.where(do_act, t, dram["act_ring"][c, amin]))
-    dram["bus_free"] = dram["bus_free"].at[c].set(
-        jnp.where(do_issue, done, dram["bus_free"][c]))
+    amin = jnp.argmin(dram["act_ring"], axis=1)                 # (C,)
+    dram["act_ring"] = dram["act_ring"].at[cidx, amin].set(
+        jnp.where(do_act, t, dram["act_ring"][cidx, amin]))
+    dram["bus_free"] = jnp.where(do_issue, done, dram["bus_free"])
     safe_src = jnp.where(do_issue, src, 0)
     slot = jnp.mod(done, RING)
     dram["ring"] = dram["ring"].at[slot, safe_src].add(

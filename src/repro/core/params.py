@@ -68,6 +68,17 @@ class SimConfig:
     parbs_cap: int = 5
     tcm_quantum: int = 1000
     tcm_lat_frac: float = 0.25       # fraction of bandwidth for latency cluster
+    # BLISS (Subramanian et al., arXiv:1504.00390)
+    bliss_threshold: int = 4         # consecutive serves before blacklisting
+    bliss_clear_interval: int = 10_000
+    # SQUASH-style probabilistic prioritization (Usui et al., 1505.07502)
+    squash_epoch: int = 100          # priority redraw interval (short, so
+                                     # mid-frame pace deficits are caught)
+    squash_lead: int = 150           # cycles of pace headroom a deadline
+                                     # source must bank before urgency clears
+    squash_pb: float = 0.75          # on-pace deadline source boost prob
+    squash_gpu_pb: float = 0.15      # GPU boost prob
+    squash_cpu_pb: float = 0.35      # CPU boost prob
     # SMS-DASH (paper §7 future work, after Usui et al. [201,202]):
     # deadline-aware stage-2 — urgent accelerator batches preempt SJF/RR
     dash: bool = False

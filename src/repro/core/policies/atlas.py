@@ -1,0 +1,42 @@
+"""ATLAS (Kim et al., HPCA'10): rank sources by least attained service,
+recomputed every epoch with exponential decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.core.schedulers import (CentralizedPolicy, RANK_SHIFT, base_score,
+                                   rank_pos)
+
+
+@policy.register
+class ATLAS(CentralizedPolicy):
+    name = "atlas"
+
+    def extra_state(self, cfg):
+        S = cfg.n_src
+        return {
+            "attained": jnp.zeros((S,), jnp.float32),
+            "served_epoch": jnp.zeros((S,), jnp.float32),
+        }
+
+    def policy_tick(self, cfg, pool, st, buf, t):
+        buf = dict(buf)
+        epoch = jnp.mod(t, cfg.atlas_epoch) == 0
+        att = cfg.atlas_alpha * buf["attained"] + buf["served_epoch"]
+        buf["attained"] = jnp.where(epoch, att, buf["attained"])
+        buf["served_epoch"] = jnp.where(epoch, 0.0, buf["served_epoch"])
+        return buf
+
+    def score(self, cfg, pool, buf, is_hit, t):
+        S = cfg.n_src
+        rank = rank_pos(buf["attained"])                # 0 = least attained
+        pri = (S - rank[buf["src"]]).astype(jnp.int32) << RANK_SHIFT
+        return pri + base_score(cfg, buf, is_hit, t)
+
+    def on_issue(self, cfg, pool, buf, do, src, t):
+        buf = dict(buf)
+        safe = jnp.where(do, src, 0)
+        buf["served_epoch"] = buf["served_epoch"].at[safe].add(
+            do.astype(jnp.float32))
+        return buf

@@ -1,0 +1,53 @@
+"""BLISS — the Blacklisting memory scheduler (Subramanian et al.,
+arXiv:1504.00390).
+
+Instead of a full application ranking, each channel watches the stream of
+issued requests: a source served `bliss_threshold` times consecutively is
+"interference-causing" and gets blacklisted. Scheduling is then just
+non-blacklisted > row-hit > age, and the blacklist is wiped every
+`bliss_clear_interval` cycles so sources are only penalized while they are
+actually streaming. State is ~20 lines: one (C,) last-served id, one (C,)
+streak counter, one (S,) blacklist bit-vector.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.core.schedulers import CentralizedPolicy, POL_BIT, base_score
+
+
+@policy.register
+class BLISS(CentralizedPolicy):
+    name = "bliss"
+
+    def extra_state(self, cfg):
+        C, S = cfg.n_channels, cfg.n_src
+        return {
+            "bl_last": jnp.full((C,), -1, jnp.int32),
+            "bl_streak": jnp.zeros((C,), jnp.int32),
+            "blacklist": jnp.zeros((S,), bool),
+        }
+
+    def policy_tick(self, cfg, pool, st, buf, t):
+        buf = dict(buf)
+        clear = jnp.mod(t, cfg.bliss_clear_interval) == 0
+        buf["blacklist"] = jnp.where(clear, False, buf["blacklist"])
+        return buf
+
+    def score(self, cfg, pool, buf, is_hit, t):
+        ok = ~buf["blacklist"][buf["src"]]              # (C, E)
+        return ok.astype(jnp.int32) * POL_BIT + \
+            base_score(cfg, buf, is_hit, t)
+
+    def on_issue(self, cfg, pool, buf, do, src, t):
+        buf = dict(buf)
+        same = do & (src == buf["bl_last"])
+        streak = jnp.where(do, jnp.where(same, buf["bl_streak"] + 1, 1),
+                           buf["bl_streak"])
+        over = do & (streak >= cfg.bliss_threshold)
+        buf["bl_last"] = jnp.where(do, src, buf["bl_last"])
+        buf["bl_streak"] = jnp.where(over, 0, streak)
+        buf["blacklist"] = buf["blacklist"].at[
+            jnp.where(over, src, cfg.n_src)].set(True, mode="drop")
+        return buf

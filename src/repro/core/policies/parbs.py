@@ -1,0 +1,60 @@
+"""PAR-BS (Mutlu & Moscibroda, ISCA'08): batch the oldest `parbs_cap`
+requests per (source, bank), serve marked batches with shortest-job-first
+source ranking before anything unmarked."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policy
+from repro.core.schedulers import (CentralizedPolicy, POL_BIT, RANK_SHIFT,
+                                   base_score, rank_pos)
+
+
+@policy.register
+class PARBS(CentralizedPolicy):
+    name = "parbs"
+
+    def extra_state(self, cfg):
+        return {"marked_left": jnp.zeros((cfg.n_src,), jnp.int32)}
+
+    def policy_tick(self, cfg, pool, st, buf, t):
+        buf = dict(buf)
+        S = cfg.n_src
+        # re-mark when no marked requests remain anywhere
+        any_marked = jnp.any(buf["valid"] & buf["marked"])
+
+        # per (channel, src, bank) age rank via one sort (O(E log E)):
+        # sort by (group, birth); rank-in-group = index - group_start
+        def remark_channel(valid, src, bank, birth):
+            E = valid.shape[0]
+            # int32-safe packing: group (<= 9 bits) above birth (21 bits)
+            group = jnp.where(valid, src * cfg.n_banks + bank, (1 << 9) - 1)
+            key = group * (1 << 21) + jnp.clip(birth, 0, (1 << 21) - 1)
+            order = jnp.argsort(key)
+            g_sorted = group[order]
+            new_seg = jnp.concatenate([jnp.array([True]),
+                                       g_sorted[1:] != g_sorted[:-1]])
+            seg_start = jax.lax.cummax(
+                jnp.where(new_seg, jnp.arange(E), 0))
+            rank_sorted = jnp.arange(E) - seg_start
+            rank = jnp.zeros((E,), jnp.int32).at[order].set(
+                rank_sorted.astype(jnp.int32))
+            return valid & (rank < cfg.parbs_cap)
+
+        new_marked = jax.vmap(remark_channel)(
+            buf["valid"], buf["src"], buf["bank"], buf["birth"])
+        buf["marked"] = jnp.where(any_marked, buf["marked"], new_marked)
+        # shortest-job ranking: total marked per src (fewest = best)
+        cnt = jnp.zeros((S,), jnp.int32).at[
+            jnp.where(buf["marked"] & buf["valid"], buf["src"], S)
+        ].add(1, mode="drop")
+        buf["marked_left"] = cnt
+        return buf
+
+    def score(self, cfg, pool, buf, is_hit, t):
+        S = cfg.n_src
+        rank = rank_pos(buf["marked_left"])             # fewest marked = 0
+        pri = (S - rank[buf["src"]]).astype(jnp.int32) << RANK_SHIFT
+        return buf["marked"].astype(jnp.int32) * POL_BIT + pri + \
+            base_score(cfg, buf, is_hit, t)

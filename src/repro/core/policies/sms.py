@@ -1,0 +1,40 @@
+"""SMS and SMS-DASH as registered `MemoryPolicy` objects.
+
+The staged machinery lives in `repro.core.sms`; this module binds it to the
+protocol. SMS-DASH is a configured *variant* — same stages, with the
+deadline-aware stage-2 preemption switched on via `configure` — so it rides
+the registry instead of being a string special-case in the simulator.
+"""
+from __future__ import annotations
+
+from repro.core import policy, sms as sms_lib
+
+
+@policy.register
+class SMS:
+    name = "sms"
+    variant_of = None
+
+    def configure(self, cfg):
+        return cfg
+
+    def init_state(self, cfg):
+        return sms_lib.sms_state(cfg)
+
+    def tick(self, cfg, pool, st, sched, t):
+        st, sched = sms_lib.stage1_admit(cfg, st, sched, t)
+        st, sched = sms_lib.stage2_drain(cfg, st, sched, t)
+        return st, sched
+
+    def select(self, cfg, pool, st, sched, dram, t):
+        return sms_lib.stage3_issue(cfg, st, sched, dram, t)
+
+
+@policy.register
+class SMSDash(SMS):
+    name = "sms_dash"
+    variant_of = "sms"
+
+    def configure(self, cfg):
+        # SMS + deadline-aware stage 2 (paper §7 extension)
+        return cfg.replace(dash=True)

@@ -1,0 +1,77 @@
+"""SQUASH-style probabilistic prioritization (Usui et al.,
+arXiv:1505.07502).
+
+SQUASH schedules hardware accelerators by *probabilistically* raising their
+priority over the cores so they meet frame deadlines without monopolizing
+the bus. This variant redraws a per-source priority bit every
+`squash_epoch` cycles:
+
+  * deadline sources behind their frame pace (plus a `squash_lead` cycle
+    margin) are *urgent*: a priority tier above everything else, tracked
+    every cycle (the paper's urgent state), and their pending requests jump
+    the admission queue;
+  * on-pace deadline sources win the probabilistic draw with `squash_pb`;
+  * the GPU wins with prob `squash_gpu_pb` (throughput is its own reward);
+  * CPUs win with prob `squash_cpu_pb`, keeping latency-sensitive cores
+    regularly boosted above the streaming sources.
+
+Within a priority tier, FR-FCFS (row-hit then age) breaks ties, so nothing
+can starve: age keeps rising for never-boosted sources.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import engine, policy
+from repro.core.schedulers import CentralizedPolicy, POL_BIT, base_score
+
+URGENT_BIT = POL_BIT << 1
+
+
+@policy.register
+class SquashPrio(CentralizedPolicy):
+    name = "squash_prio"
+
+    def extra_state(self, cfg):
+        S = cfg.n_src
+        return {
+            "sq_prio": jnp.zeros((S,), bool),
+            "sq_urgent": jnp.zeros((S,), bool),
+            "sq_rng": (jnp.arange(S, dtype=jnp.uint32) * jnp.uint32(747796405)
+                       + jnp.uint32(2891336453)),
+        }
+
+    def policy_tick(self, cfg, pool, st, buf, t):
+        buf = dict(buf)
+        is_accel = pool["dl_period"] > 0
+        # urgent until ahead of the linear frame pace by squash_lead cycles:
+        # done/reqs < (phase + lead)/period. (A lead keeps the source from
+        # asymptotically tracking the pace line and missing by a hair; a
+        # permanently-urgent slack rule floods its own bank queue and does
+        # worse — measured in benchmarks/dash_deadline.)
+        phase = jnp.mod(t, jnp.maximum(pool["dl_period"], 1))
+        remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
+        buf["sq_urgent"] = is_accel & (remaining > 0) & \
+            (st["period_done"] * pool["dl_period"]
+             < (phase + cfg.squash_lead) * pool["dl_reqs"])
+        epoch = jnp.mod(t, cfg.squash_epoch) == 0
+        rng, u = engine.lcg_step(buf["sq_rng"])
+        p = jnp.where(is_accel, cfg.squash_pb,
+                      jnp.where(pool["is_gpu"], cfg.squash_gpu_pb,
+                                cfg.squash_cpu_pb))
+        buf["sq_rng"] = jnp.where(epoch, rng, buf["sq_rng"])
+        buf["sq_prio"] = jnp.where(epoch, u < p, buf["sq_prio"])
+        return buf
+
+    def score(self, cfg, pool, buf, is_hit, t):
+        src = buf["src"]
+        urgent = buf["sq_urgent"][src].astype(jnp.int32)    # (C, E)
+        pri = buf["sq_prio"][src].astype(jnp.int32)
+        return urgent * URGENT_BIT + pri * POL_BIT + \
+            base_score(cfg, buf, is_hit, t)
+
+    def admit_key(self, cfg, pool, st, buf, t):
+        # urgency reaches the admission port too: an urgent source's pending
+        # request admits ahead of anything merely older
+        return st["pend_birth"] - jnp.where(buf["sq_urgent"],
+                                            jnp.int32(1 << 20), 0)

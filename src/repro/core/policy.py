@@ -1,0 +1,160 @@
+"""`MemoryPolicy` protocol + registry: one scheduler API for the whole repo.
+
+The paper's thesis is that a memory controller is three decoupled tasks
+behind a common interface. This module is that interface. A policy is an
+object with
+
+    name         registry key ("frfcfs", "sms", "bliss", ...)
+    variant_of   None, or the name of the policy this one is a configured
+                 variant of (variants are excluded from the baseline sweep)
+    configure(cfg)                    -> cfg     (bake policy knobs in)
+    init_state(cfg)                   -> sched   (pytree of jax arrays)
+    tick(cfg, pool, st, sched, t)     -> (st, sched)        admission +
+                                         periodic policy maintenance
+    select(cfg, pool, st, sched, dram, t) -> (st, sched, dram)  pick + issue
+
+and the simulator is one generic `lax.scan` body (`make_step`) over whatever
+policy object the registry hands back — no string dispatch anywhere.
+
+Registering a policy:
+
+    from repro.core import policy
+    from repro.core.schedulers import CentralizedPolicy
+
+    @policy.register
+    class Oldest(CentralizedPolicy):
+        name = "oldest"
+        def score(self, cfg, pool, buf, is_hit, t):
+            ...
+
+`Registry` itself is domain-agnostic; `repro.serving.scheduler` uses a
+second instance so the serving engine and the cycle sim enumerate policies
+the same way.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
+
+from repro.core import engine
+from repro.core.params import SimConfig
+
+
+class MemoryPolicy(Protocol):
+    """Structural type for cycle-sim scheduling policies."""
+
+    name: str
+    variant_of: Optional[str]
+
+    def configure(self, cfg: SimConfig) -> SimConfig: ...
+
+    def init_state(self, cfg: SimConfig) -> Dict[str, Any]: ...
+
+    def tick(self, cfg: SimConfig, pool, st, sched, t): ...
+
+    def select(self, cfg: SimConfig, pool, st, sched, dram, t): ...
+
+
+class Registry:
+    """Ordered name -> object registry with a decorator interface.
+
+    Mapping-style access (`reg["sms"]`, `reg["sms"] = obj`, `"sms" in reg`,
+    `reg.keys()`) is supported so call sites and tests can treat a registry
+    like the plain dicts it replaces.
+    """
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, Any] = {}
+
+    def register(self, name: Optional[str] = None) -> Callable:
+        """Use as ``@reg.register("name")`` or ``@reg.register`` (reads
+        the object's ``name`` attribute)."""
+        def deco(obj, _name=name if isinstance(name, str) else None):
+            key = _name or getattr(obj, "name", None)
+            if not key:
+                raise ValueError(f"{self.kind} needs a `name` to register")
+            if key in self._entries:
+                raise ValueError(f"duplicate {self.kind} {key!r}")
+            self._entries[key] = obj
+            return obj
+
+        if name is None or isinstance(name, str):
+            return deco
+        return deco(name)                       # bare @reg.register on a class
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown {self.kind} {name!r}; "
+                           f"registered: {', '.join(self._entries)}") from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._entries)
+
+    def keys(self):
+        return self._entries.keys()
+
+    def items(self):
+        return self._entries.items()
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def __getitem__(self, name: str) -> Any:
+        return self.get(name)
+
+    def __setitem__(self, name: str, obj: Any) -> None:
+        self._entries[name] = obj               # tests swap entries in-place
+
+
+POLICY_REGISTRY = Registry("memory policy")
+
+
+def register(cls):
+    """Class decorator: instantiate and register a `MemoryPolicy`."""
+    POLICY_REGISTRY.register(cls.name)(cls())
+    return cls
+
+
+def _ensure_builtin() -> None:
+    # Lazy so `policy` stays import-cycle-free (policies import schedulers,
+    # which imports engine); the built-ins self-register on first lookup.
+    from repro.core import policies  # noqa: F401
+
+
+def get(name: str) -> MemoryPolicy:
+    _ensure_builtin()
+    return POLICY_REGISTRY.get(name)
+
+
+def names() -> Tuple[str, ...]:
+    """All registered policies, in registration order."""
+    _ensure_builtin()
+    return POLICY_REGISTRY.names()
+
+
+def baseline_names() -> Tuple[str, ...]:
+    """Policies that are not configured variants of another policy."""
+    _ensure_builtin()
+    return tuple(n for n, p in POLICY_REGISTRY.items()
+                 if getattr(p, "variant_of", None) is None)
+
+
+def make_step(cfg: SimConfig, pol: MemoryPolicy):
+    """One simulator cycle, generic over the policy object."""
+
+    def step(carry, t):
+        st, sched, dram = carry
+        pool, active = st["_pool"], st["_active"]
+        st, dram = engine.completions_tick(st, dram, t)
+        st = engine.deadline_tick(cfg, pool, st, t)
+        st = engine.source_tick(cfg, pool, st, active, t)
+        st, sched = pol.tick(cfg, pool, st, sched, t)
+        st, sched, dram = pol.select(cfg, pool, st, sched, dram, t)
+        return (st, sched, dram), None
+
+    return step

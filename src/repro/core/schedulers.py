@@ -1,18 +1,31 @@
-"""Centralized request-buffer schedulers: FR-FCFS, ATLAS, PAR-BS, TCM.
+"""Centralized request-buffer substrate for `MemoryPolicy` implementations.
 
-These share one structure — a per-channel CAM-style request buffer that the
-policy scores every cycle — exactly the monolithic design SMS decomposes.
+The FR-FCFS family (FR-FCFS, ATLAS, PAR-BS, TCM, BLISS, SQUASH-prio, ...)
+shares one structure — a per-channel CAM-style request buffer scored every
+cycle — exactly the monolithic design SMS decomposes. This module provides
+that substrate as `CentralizedPolicy`, a base class for the protocol in
+`repro.core.policy`: subclasses (one module each under
+`repro.core.policies/`) override
+
+    extra_state(cfg)                  policy-private state arrays
+    policy_tick(cfg, pool, st, buf, t)    periodic maintenance (epochs,
+                                          quanta, batch remarking, ...)
+    score(cfg, pool, buf, is_hit, t)      (C, E) int32 lexicographic score
+    on_issue(cfg, pool, buf, do, src, t)  per-issue accounting hooks
+
 Scores are lexicographic integers:
 
     [policy bits 22+] [rank 15..20] [row-hit 14] [age 0..13]
 
 Buffer shapes: (C, E). Admission is one request per channel per cycle
 (single MC ingress port); half the entries are reserved for CPU sources
-(the paper's anti-starvation provisioning, §4).
+(the paper's anti-starvation provisioning, §4). Admission and issue are
+expressed as whole-(C, ...) array ops — channels never appear as a Python
+loop, so trace size is independent of `n_channels`.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -27,191 +40,123 @@ POL_BIT = 1 << 22
 
 
 def buffer_state(cfg: SimConfig) -> Dict[str, Any]:
-    C, E, S = cfg.n_channels, cfg.buf_entries, cfg.n_src
+    """The shared CAM buffer; policy-private arrays live in extra_state."""
+    C, E = cfg.n_channels, cfg.buf_entries
     z = lambda dt: jnp.zeros((C, E), dt)
     return {
         "valid": z(bool), "src": z(jnp.int32), "bank": z(jnp.int32),
         "row": z(jnp.int32), "birth": z(jnp.int32), "marked": z(bool),
-        # ATLAS
-        "attained": jnp.zeros((S,), jnp.float32),
-        "served_epoch": jnp.zeros((S,), jnp.float32),
-        # TCM
-        "served_quant": jnp.zeros((S,), jnp.float32),
-        "tcm_rank": jnp.zeros((S,), jnp.int32),
-        "tcm_is_lat": jnp.ones((S,), bool),
-        "shuffle": jnp.zeros((), jnp.int32),
-        # PAR-BS
-        "marked_left": jnp.zeros((S,), jnp.int32),
     }
 
 
-def _rank_pos(key: jax.Array) -> jax.Array:
+def rank_pos(key: jax.Array) -> jax.Array:
     """rank position of each element under ascending sort (0 = smallest)."""
     return jnp.argsort(jnp.argsort(key)).astype(jnp.int32)
 
 
-def admit(cfg: SimConfig, pool, st, buf, t):
-    """One admission per channel per cycle; oldest pending request wins.
+def base_score(cfg: SimConfig, buf, is_hit, t) -> jax.Array:
+    """FR-FCFS core: row hit above age. (C, E) int32."""
+    age = jnp.clip(t - buf["birth"], 0, AGE_CAP)
+    return is_hit.astype(jnp.int32) * HIT_BIT + age
+
+
+def admit(cfg: SimConfig, pool, st, buf, t, key=None):
+    """One admission per channel per cycle; lowest-key pending request wins
+    (default key: birth, i.e. oldest first).
 
     Enforces the CPU reservation: GPU sources are blocked while they hold
-    >= gpu_cap entries in that channel's buffer.
+    >= gpu_cap entries in that channel's buffer. Sources map to exactly one
+    channel, so all channels admit independently in one batched op.
     """
-    S = cfg.n_src
+    S, C = cfg.n_src, cfg.n_channels
     is_gpu_src = pool["is_gpu"]
     st = dict(st)
     buf = dict(buf)
-    for c in range(cfg.n_channels):
-        ch = engine.channel_of(cfg, st["pend_bank"])
-        gpu_cnt = jnp.sum(buf["valid"][c] & is_gpu_src[buf["src"][c]])
-        gpu_ok = gpu_cnt < cfg.gpu_cap
-        cand = st["pend_valid"] & (ch == c) & (gpu_ok | ~is_gpu_src)
-        has_free = ~jnp.all(buf["valid"][c])
-        key = jnp.where(cand, st["pend_birth"], jnp.int32(2**30))
-        s = jnp.argmin(key)
-        do = cand[s] & has_free
-        slot = jnp.argmin(buf["valid"][c])          # first free slot
-        safe = jnp.where(do, slot, 0)
-        wr = lambda a, v: a.at[c, safe].set(jnp.where(do, v, a[c, safe]))
-        buf["valid"] = wr(buf["valid"], True)
-        buf["src"] = wr(buf["src"], s.astype(jnp.int32))
-        buf["bank"] = wr(buf["bank"], engine.bank_in_channel(cfg, st["pend_bank"][s]))
-        buf["row"] = wr(buf["row"], st["pend_row"][s])
-        buf["birth"] = wr(buf["birth"], st["pend_birth"][s])
-        buf["marked"] = wr(buf["marked"], False)
-        st["pend_valid"] = st["pend_valid"].at[s].set(
-            jnp.where(do, False, st["pend_valid"][s]))
+    cidx = jnp.arange(C)
+    ch = engine.channel_of(cfg, st["pend_bank"])                # (S,)
+    gpu_cnt = jnp.sum(buf["valid"] & is_gpu_src[buf["src"]], axis=1)  # (C,)
+    gpu_ok = gpu_cnt < cfg.gpu_cap
+    cand = st["pend_valid"][None, :] & (ch[None, :] == cidx[:, None]) \
+        & (gpu_ok[:, None] | ~is_gpu_src[None, :])              # (C, S)
+    has_free = ~jnp.all(buf["valid"], axis=1)                   # (C,)
+    key = st["pend_birth"] if key is None else key
+    key = jnp.where(cand, key[None, :], jnp.int32(2**30))
+    s = jnp.argmin(key, axis=1)                                 # (C,)
+    do = cand[cidx, s] & has_free
+    slot = jnp.argmin(buf["valid"], axis=1)                     # first free
+    safe = jnp.where(do, slot, 0)
+    wr = lambda a, v: a.at[cidx, safe].set(jnp.where(do, v, a[cidx, safe]))
+    buf["valid"] = wr(buf["valid"], True)
+    buf["src"] = wr(buf["src"], s.astype(jnp.int32))
+    buf["bank"] = wr(buf["bank"], engine.bank_in_channel(cfg,
+                                                         st["pend_bank"][s]))
+    buf["row"] = wr(buf["row"], st["pend_row"][s])
+    buf["birth"] = wr(buf["birth"], st["pend_birth"][s])
+    buf["marked"] = wr(buf["marked"], False)
+    st["pend_valid"] = st["pend_valid"].at[
+        jnp.where(do, s, S)].set(False, mode="drop")
     return st, buf
 
 
-# ---------------------------------------------------------------------------
-# policy maintenance + scoring
-# ---------------------------------------------------------------------------
+class CentralizedPolicy:
+    """`MemoryPolicy` base for single-stage CAM-buffer schedulers."""
 
-def policy_tick(cfg: SimConfig, policy: str, pool, buf, t):
-    """Periodic policy state updates (epochs/quanta/batch remarking)."""
-    buf = dict(buf)
-    S = cfg.n_src
-    if policy == "atlas":
-        epoch = jnp.mod(t, cfg.atlas_epoch) == 0
-        att = cfg.atlas_alpha * buf["attained"] + buf["served_epoch"]
-        buf["attained"] = jnp.where(epoch, att, buf["attained"])
-        buf["served_epoch"] = jnp.where(epoch, 0.0, buf["served_epoch"])
-    elif policy == "tcm":
-        quant = jnp.mod(t, cfg.tcm_quantum) == 0
-        inten = buf["served_quant"]                     # MPKC proxy
-        order = _rank_pos(inten)                        # ascending intensity
-        total = jnp.maximum(jnp.sum(inten), 1.0)
-        # latency cluster: least-intense prefix holding <= lat_frac of BW
-        sorted_i = jnp.sort(inten)
-        cum = jnp.cumsum(sorted_i)
-        is_lat_sorted = cum <= cfg.tcm_lat_frac * total
-        new_is_lat = is_lat_sorted[order]
-        # ranks: latency cluster by ascending intensity; bw cluster shuffled
-        shuf = buf["shuffle"] + quant.astype(jnp.int32)
-        lat_rank = order
-        bw_rank = jnp.mod(order + shuf, S)
-        new_rank = jnp.where(new_is_lat, lat_rank, bw_rank)
-        buf["tcm_is_lat"] = jnp.where(quant, new_is_lat, buf["tcm_is_lat"])
-        buf["tcm_rank"] = jnp.where(quant, new_rank, buf["tcm_rank"])
-        buf["served_quant"] = jnp.where(quant, 0.0, buf["served_quant"])
-        buf["shuffle"] = shuf
-    elif policy == "parbs":
-        # re-mark when no marked requests remain anywhere
-        any_marked = jnp.any(buf["valid"] & buf["marked"])
+    name = "centralized"
+    variant_of = None
 
-        # per (channel, src, bank) age rank via one sort (O(E log E)):
-        # sort by (group, birth); rank-in-group = index - group_start
-        def remark_channel(valid, src, bank, birth):
-            E = valid.shape[0]
-            # int32-safe packing: group (<= 9 bits) above birth (21 bits)
-            group = jnp.where(valid, src * cfg.n_banks + bank, (1 << 9) - 1)
-            key = group * (1 << 21) + jnp.clip(birth, 0, (1 << 21) - 1)
-            order = jnp.argsort(key)
-            g_sorted = group[order]
-            new_seg = jnp.concatenate([jnp.array([True]),
-                                       g_sorted[1:] != g_sorted[:-1]])
-            seg_start = jax.lax.cummax(
-                jnp.where(new_seg, jnp.arange(E), 0))
-            rank_sorted = jnp.arange(E) - seg_start
-            rank = jnp.zeros((E,), jnp.int32).at[order].set(
-                rank_sorted.astype(jnp.int32))
-            return valid & (rank < cfg.parbs_cap)
+    # -- per-policy hooks --------------------------------------------------
+    def extra_state(self, cfg: SimConfig) -> Dict[str, Any]:
+        return {}
 
-        new_marked = jax.vmap(remark_channel)(
-            buf["valid"], buf["src"], buf["bank"], buf["birth"])
-        buf["marked"] = jnp.where(any_marked, buf["marked"], new_marked)
-        # shortest-job ranking: total marked per src (fewest = best)
-        cnt = jnp.zeros((S,), jnp.int32).at[
-            jnp.where(buf["marked"] & buf["valid"], buf["src"], S)
-        ].add(1, mode="drop")
-        buf["marked_left"] = cnt
-    return buf
+    def policy_tick(self, cfg: SimConfig, pool, st, buf, t):
+        return buf
 
+    def score(self, cfg: SimConfig, pool, buf, is_hit, t) -> jax.Array:
+        raise NotImplementedError
 
-def score_entries(cfg: SimConfig, policy: str, pool, buf, c: int,
-                  is_hit, t):
-    """int32 lexicographic score per entry of channel c (higher = better)."""
-    S = cfg.n_src
-    src = buf["src"][c]
-    age = jnp.clip(t - buf["birth"][c], 0, AGE_CAP)
-    hit = is_hit.astype(jnp.int32) * HIT_BIT
-    base = hit + age
-    if policy == "frfcfs":
-        return base
-    if policy == "atlas":
-        rank = _rank_pos(buf["attained"])               # 0 = least attained
-        pri = (S - rank[src]).astype(jnp.int32) << RANK_SHIFT
-        return pri + base
-    if policy == "parbs":
-        rank = _rank_pos(buf["marked_left"])            # fewest marked = 0
-        pri = (S - rank[src]).astype(jnp.int32) << RANK_SHIFT
-        return buf["marked"][c].astype(jnp.int32) * POL_BIT + pri + base
-    if policy == "tcm":
-        pri = (S - buf["tcm_rank"][src]).astype(jnp.int32) << RANK_SHIFT
-        return buf["tcm_is_lat"][src].astype(jnp.int32) * POL_BIT + pri + base
-    raise ValueError(policy)
+    def on_issue(self, cfg: SimConfig, pool, buf, do, src, t):
+        return buf
 
+    def admit_key(self, cfg: SimConfig, pool, st, buf, t):
+        """(S,) admission ordering key, lowest first (default: oldest)."""
+        return st["pend_birth"]
 
-def schedule_and_issue(cfg: SimConfig, policy: str, pool, st, buf, dram, t):
-    """Pick + issue at most one request per channel."""
-    for c in range(cfg.n_channels):
-        elig, lat, is_hit = engine.eligibility(
-            cfg, dram, c, buf["bank"][c], buf["row"][c], buf["valid"][c], t)
-        score = score_entries(cfg, policy, pool, buf, c, is_hit, t)
+    # -- MemoryPolicy protocol ---------------------------------------------
+    def configure(self, cfg: SimConfig) -> SimConfig:
+        return cfg
+
+    def init_state(self, cfg: SimConfig) -> Dict[str, Any]:
+        return {**buffer_state(cfg), **self.extra_state(cfg)}
+
+    def tick(self, cfg: SimConfig, pool, st, buf, t):
+        st, buf = admit(cfg, pool, st, buf, t,
+                        key=self.admit_key(cfg, pool, st, buf, t))
+        buf = self.policy_tick(cfg, pool, st, buf, t)
+        return st, buf
+
+    def select(self, cfg: SimConfig, pool, st, buf, dram, t):
+        """Pick + issue at most one request per channel (all channels at
+        once; cross-channel state only meets in commutative scatter-adds)."""
+        C = cfg.n_channels
+        cidx = jnp.arange(C)
+        elig, lat, is_hit = jax.vmap(
+            lambda c, bank, row, valid: engine.eligibility(
+                cfg, dram, c, bank, row, valid, t)
+        )(cidx, buf["bank"], buf["row"], buf["valid"])          # (C, E) each
+        score = self.score(cfg, pool, buf, is_hit, t)
         score = jnp.where(elig, score, -1)
-        pick = jnp.argmax(score)
-        do = score[pick] >= 0
-        src = buf["src"][c, pick]
-        dram, st = engine.issue(cfg, dram, st, c, do, buf["bank"][c, pick],
-                                buf["row"][c, pick], src,
-                                buf["birth"][c, pick], lat[pick],
-                                is_hit[pick], t)
+        pick = jnp.argmax(score, axis=1)                        # (C,)
+        at_pick = lambda a: jnp.take_along_axis(a, pick[:, None], 1)[:, 0]
+        do = at_pick(score) >= 0
+        src = at_pick(buf["src"])
+        dram, st = engine.issue_channels(
+            cfg, dram, st, do, at_pick(buf["bank"]), at_pick(buf["row"]),
+            src, at_pick(buf["birth"]), at_pick(lat), at_pick(is_hit), t)
         safe = jnp.where(do, pick, 0)
         buf = dict(buf)
-        buf["valid"] = buf["valid"].at[c, safe].set(
-            jnp.where(do, False, buf["valid"][c, safe]))
-        buf["marked"] = buf["marked"].at[c, safe].set(
-            jnp.where(do, False, buf["marked"][c, safe]))
-        inc = jnp.where(do, 1.0, 0.0)
-        ssafe = jnp.where(do, src, 0)
-        upd = lambda a: a.at[ssafe].add(inc)
-        buf["served_epoch"] = upd(buf["served_epoch"])
-        buf["served_quant"] = upd(buf["served_quant"])
-    return st, buf, dram
-
-
-def make_step(cfg: SimConfig, policy: str):
-    """One simulator cycle for a centralized-buffer policy."""
-
-    def step(carry, t):
-        st, buf, dram = carry
-        pool, active = st["_pool"], st["_active"]
-        st, dram = engine.completions_tick(st, dram, t)
-        st = engine.deadline_tick(cfg, pool, st, t)
-        st = engine.source_tick(cfg, pool, st, active, t)
-        st, buf = admit(cfg, pool, st, buf, t)
-        buf = policy_tick(cfg, policy, pool, buf, t)
-        st, buf, dram = schedule_and_issue(cfg, policy, pool, st, buf, dram, t)
-        return (st, buf, dram), None
-
-    return step
+        clear = lambda a: a.at[cidx, safe].set(
+            jnp.where(do, False, a[cidx, safe]))
+        buf["valid"] = clear(buf["valid"])
+        buf["marked"] = clear(buf["marked"])
+        buf = self.on_issue(cfg, pool, buf, do, src, t)
+        return st, buf, dram

@@ -3,6 +3,11 @@
 ``simulate(cfg, policy, pool_batch, active_batch, n_cycles, warmup)`` runs a
 batch of workloads through one scheduler and returns per-source measured
 metrics. Stats are delta-measured after a warmup period.
+
+Policies resolve by name through `repro.core.policy.POLICY_REGISTRY`; the
+drivers are generic over the `MemoryPolicy` protocol, so a newly registered
+policy is immediately simulatable (and appears in `ALL_POLICIES`) with no
+changes here.
 """
 from __future__ import annotations
 
@@ -13,36 +18,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, schedulers, sms as sms_lib
+from repro.core import engine
+from repro.core import policy as policy_api
 from repro.core.params import SimConfig, SourcePool
-
-POLICIES = ("frfcfs", "atlas", "parbs", "tcm", "sms")
-# sms_dash = SMS + deadline-aware stage 2 (paper §7 extension)
-ALL_POLICIES = POLICIES + ("sms_dash",)
 
 _SNAP_KEYS = ("insts_done", "emitted", "completed", "sum_lat", "dl_met",
               "dl_missed")
 _DRAM_SNAP = ("hits", "issued")
 
 
-def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-             pool: Dict[str, jax.Array], active: jax.Array
-             ) -> Dict[str, jax.Array]:
-    if policy == "sms_dash":
-        cfg = cfg.replace(dash=True)
-        policy = "sms"
+def __getattr__(name: str):
+    # Live registry enumerations (PEP 562), in registration order, so a
+    # policy registered at runtime appears immediately. POLICIES is the
+    # baseline sweep (no configured variants); ALL_POLICIES adds the
+    # variants, e.g. sms_dash.
+    if name == "POLICIES":
+        return policy_api.baseline_names()
+    if name == "ALL_POLICIES":
+        return policy_api.names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+def _init(cfg: SimConfig, policy: str, pool, active):
+    """Resolve the policy and build (cfg, policy object, initial carry)."""
+    pol = policy_api.get(policy)
+    cfg = pol.configure(cfg)
     st = engine.source_state(cfg)
     st["_pool"] = pool
     st["_active"] = active
-    dram = engine.dram_state(cfg)
-    if policy == "sms":
-        sched = sms_lib.sms_state(cfg)
-        step = sms_lib.make_step(cfg)
-    else:
-        sched = schedulers.buffer_state(cfg)
-        step = schedulers.make_step(cfg, policy)
+    return cfg, pol, (st, pol.init_state(cfg), engine.dram_state(cfg))
 
-    carry = (st, sched, dram)
+
+def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
+             pool: Dict[str, jax.Array], active: jax.Array
+             ) -> Dict[str, jax.Array]:
+    cfg, pol, carry = _init(cfg, policy, pool, active)
+    step = policy_api.make_step(cfg, pol)
     carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup))
     st_w, _, dram_w = carry
     snap = {k: st_w[k] for k in _SNAP_KEYS}
@@ -105,26 +115,16 @@ def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
     pool: dict of (S,) arrays; active: (S,) bool.
     Returns (src_state, sched_state, dram_state) as numpy trees.
     """
-    if policy == "sms_dash":
-        cfg = cfg.replace(dash=True)
-        policy = "sms"
-    st = engine.source_state(cfg)
-    st["_pool"] = _fill_deadline_keys(
+    pool = _fill_deadline_keys(
         {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
-    st["_active"] = jnp.asarray(active)
-    dram = engine.dram_state(cfg)
-    if policy == "sms":
-        sched = sms_lib.sms_state(cfg)
-        step = sms_lib.make_step(cfg)
-    else:
-        sched = schedulers.buffer_state(cfg)
-        step = schedulers.make_step(cfg, policy)
+    cfg, pol, carry = _init(cfg, policy, pool, jnp.asarray(active))
+    step = policy_api.make_step(cfg, pol)
 
     @jax.jit
     def run(carry):
         return jax.lax.scan(step, carry, jnp.arange(n_cycles))[0]
 
-    st_f, sched_f, dram_f = run((st, sched, dram))
+    st_f, sched_f, dram_f = run(carry)
     to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)
     return to_np(st_f), to_np(sched_f), to_np(dram_f)
 

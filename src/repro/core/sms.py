@@ -10,7 +10,14 @@ Three decoupled stages, all simple FIFOs:
      issue; DRAM timing legality enforced; round-robin across banks.
 
 Unlike the centralized schedulers there is no CAM scan: every structure is a
-head/length circular FIFO — which is exactly the power/area claim §5.2 audits.
+head/length circular FIFO — which is exactly the power/area claim §5.2
+audits.
+
+These stage functions are the implementation behind the registered "sms" /
+"sms_dash" `MemoryPolicy` objects (see `repro.core.policies.sms`): stages 1+2
+form the policy's `tick`, stage 3 its `select`. Every stage is a whole-array
+op over all channels at once — no Python channel loop — so trace size and
+compile time are independent of `n_channels`.
 """
 from __future__ import annotations
 
@@ -67,7 +74,7 @@ def batch_info(cfg: SimConfig, sms: Dict[str, Any], t):
     return batch_len, ready
 
 
-def stage1_admit(cfg: SimConfig, pool, st, sms, t):
+def stage1_admit(cfg: SimConfig, st, sms, t):
     """Decentralized admission: every source pushes into its own FIFO."""
     S, F = cfg.n_src, cfg.fifo_size
     st = dict(st)
@@ -90,7 +97,7 @@ def stage1_admit(cfg: SimConfig, pool, st, sms, t):
     return st, sms
 
 
-def stage2_drain(cfg: SimConfig, pool, st, sms, t):
+def stage2_drain(cfg: SimConfig, st, sms, t):
     """Pick ready batches (SJF w.p. p / RR w.p. 1-p) and drain 1 req/cycle."""
     C, S, F = cfg.n_channels, cfg.n_src, cfg.fifo_size
     B, D = cfg.n_banks, cfg.dcs_size
@@ -167,44 +174,37 @@ def stage2_drain(cfg: SimConfig, pool, st, sms, t):
     return st, sms
 
 
-def stage3_issue(cfg: SimConfig, pool, st, sms, dram, t):
-    """DCS: issue from per-bank FIFO heads, RR across eligible banks."""
+def stage3_issue(cfg: SimConfig, st, sms, dram, t):
+    """DCS: issue from per-bank FIFO heads, RR across eligible banks.
+
+    All channels resolve at once: per-channel picks are independent (each
+    touches only its own DCS/DRAM rows) and issue side effects commute.
+    """
     C, B, D = cfg.n_channels, cfg.n_banks, cfg.dcs_size
     sms = dict(sms)
-    for c in range(C):
-        head = sms["d_head"][c]                             # (B,)
-        bidx = jnp.arange(B)
-        row = sms["d_row"][c, bidx, head]
-        src = sms["d_src"][c, bidx, head]
-        birth = sms["d_birth"][c, bidx, head]
-        valid = sms["d_len"][c] > 0
-        elig, lat, is_hit = engine.eligibility(cfg, dram, c, bidx, row,
-                                               valid, t)
-        rr_key = jnp.where(elig, (bidx - sms["rr_bank"][c]) % B, 1 << 28)
-        pick = jnp.argmin(rr_key)
-        do = elig[pick]
-        dram, st = engine.issue(cfg, dram, st, c, do, pick, row[pick],
-                                src[pick], birth[pick], lat[pick],
-                                is_hit[pick], t)
-        psafe = jnp.where(do, pick, 0)
-        sms["d_head"] = sms["d_head"].at[c, psafe].set(
-            jnp.where(do, (head[psafe] + 1) % D, head[psafe]))
-        sms["d_len"] = sms["d_len"].at[c, psafe].add(jnp.where(do, -1, 0))
-        sms["rr_bank"] = sms["rr_bank"].at[c].set(
-            jnp.where(do, (pick + 1) % B, sms["rr_bank"][c]).astype(jnp.int32))
+    cidx = jnp.arange(C)
+    head = sms["d_head"]                                    # (C,B)
+    at_head = lambda a: jnp.take_along_axis(a, head[..., None], 2)[..., 0]
+    row = at_head(sms["d_row"])                             # (C,B)
+    src = at_head(sms["d_src"])
+    birth = at_head(sms["d_birth"])
+    valid = sms["d_len"] > 0
+    elig, lat, is_hit = jax.vmap(
+        lambda c, r, v: engine.eligibility(cfg, dram, c, jnp.arange(B), r,
+                                           v, t))(cidx, row, valid)
+    rr_key = jnp.where(elig, (jnp.arange(B)[None, :]
+                              - sms["rr_bank"][:, None]) % B, 1 << 28)
+    pick = jnp.argmin(rr_key, axis=1)                       # (C,)
+    at_pick = lambda a: jnp.take_along_axis(a, pick[:, None], 1)[:, 0]
+    do = at_pick(elig)
+    dram, st = engine.issue_channels(
+        cfg, dram, st, do, pick, at_pick(row), at_pick(src), at_pick(birth),
+        at_pick(lat), at_pick(is_hit), t)
+    psafe = jnp.where(do, pick, 0)
+    head_p = head[cidx, psafe]
+    sms["d_head"] = sms["d_head"].at[cidx, psafe].set(
+        jnp.where(do, (head_p + 1) % D, head_p))
+    sms["d_len"] = sms["d_len"].at[cidx, psafe].add(jnp.where(do, -1, 0))
+    sms["rr_bank"] = jnp.where(do, (pick + 1) % B,
+                               sms["rr_bank"]).astype(jnp.int32)
     return st, sms, dram
-
-
-def make_step(cfg: SimConfig):
-    def step(carry, t):
-        st, sms, dram = carry
-        pool, active = st["_pool"], st["_active"]
-        st, dram = engine.completions_tick(st, dram, t)
-        st = engine.deadline_tick(cfg, pool, st, t)
-        st = engine.source_tick(cfg, pool, st, active, t)
-        st, sms = stage1_admit(cfg, pool, st, sms, t)
-        st, sms = stage2_drain(cfg, pool, st, sms, t)
-        st, sms, dram = stage3_issue(cfg, pool, st, sms, dram, t)
-        return (st, sms, dram), None
-
-    return step

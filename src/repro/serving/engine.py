@@ -175,10 +175,7 @@ def run_serving(policy: str, clients: List[ClientSpec],
                 max_steps: int = 200_000) -> Dict:
     """Run one policy; `active` restricts to a client subset (alone runs)."""
     engine_cfg = engine_cfg or EngineConfig()
-    if policy.startswith("sms"):
-        sched = SCHEDULERS[policy](len(clients), seed=seed)
-    else:
-        sched = SCHEDULERS[policy](len(clients))
+    sched = SCHEDULERS.get(policy)(len(clients), seed=seed)
     eng = ServingEngine(engine_cfg, sched, seed=seed)
     reqs = generate_requests(clients, horizon_ms, seed=seed)
     if active is not None:

@@ -14,21 +14,35 @@ timing constraints.
 
 Baselines: FCFS (single global queue) and LOCALITY-FIRST (FR-FCFS analogue:
 always prefer requests whose prefix pages are already hot).
+
+Schedulers register with `SCHEDULERS`, an instance of the same
+`repro.core.policy.Registry` the cycle sim's memory policies use, so both
+domains enumerate and resolve policies through one mechanism:
+
+    @SCHEDULERS.register
+    class MyScheduler(SchedulerBase):
+        name = "mine"
+        ...
 """
 from __future__ import annotations
 
 import collections
+import functools
 import random
 from typing import Deque, Dict, List, Optional
 
+from repro.core.policy import Registry
 from repro.serving.types import Request
+
+SCHEDULERS = Registry("serving scheduler")
 
 
 class SchedulerBase:
     name = "base"
 
-    def __init__(self, n_clients: int):
+    def __init__(self, n_clients: int, seed: int = 0):
         self.n_clients = n_clients
+        self.seed = seed
 
     def enqueue(self, req: Request, now: float) -> None:
         raise NotImplementedError
@@ -44,13 +58,14 @@ class SchedulerBase:
         raise NotImplementedError
 
 
+@SCHEDULERS.register
 class FCFSScheduler(SchedulerBase):
     """Single global arrival-ordered queue (no client awareness)."""
 
     name = "fcfs"
 
-    def __init__(self, n_clients: int):
-        super().__init__(n_clients)
+    def __init__(self, n_clients: int, seed: int = 0):
+        super().__init__(n_clients, seed)
         self.q: Deque[Request] = collections.deque()
 
     def enqueue(self, req, now):
@@ -63,14 +78,15 @@ class FCFSScheduler(SchedulerBase):
         return len(self.q)
 
 
+@SCHEDULERS.register
 class LocalityFirstScheduler(SchedulerBase):
     """FR-FCFS analogue: requests hitting the currently-open prefix first,
     then oldest. Maximizes page reuse; starves low-locality clients."""
 
     name = "locality"
 
-    def __init__(self, n_clients: int):
-        super().__init__(n_clients)
+    def __init__(self, n_clients: int, seed: int = 0):
+        super().__init__(n_clients, seed)
         self.q: List[Request] = []
         self.open_prefix: Optional[int] = None
 
@@ -91,6 +107,7 @@ class LocalityFirstScheduler(SchedulerBase):
         return len(self.q)
 
 
+@SCHEDULERS.register
 class SMSScheduler(SchedulerBase):
     """The paper's three stages on serving requests.
 
@@ -108,7 +125,7 @@ class SMSScheduler(SchedulerBase):
                  admission_depth: int = 64, seed: int = 0,
                  adaptive_p: bool = False, p_min: float = 0.5,
                  p_max: float = 0.98, wait_target_ms: float = 30.0):
-        super().__init__(n_clients)
+        super().__init__(n_clients, seed)
         self.fifos: List[Deque[Request]] = [collections.deque()
                                             for _ in range(n_clients)]
         self.fifo_size = fifo_size
@@ -192,12 +209,5 @@ class SMSScheduler(SchedulerBase):
         return len(self.admission) + sum(len(f) for f in self.fifos)
 
 
-import functools
-
-SCHEDULERS = {
-    "fcfs": FCFSScheduler,
-    "locality": LocalityFirstScheduler,
-    "sms": SMSScheduler,
-    "sms_adaptive": functools.partial(SMSScheduler, adaptive_p=True,
-                                      sjf_prob=0.7),
-}
+SCHEDULERS.register("sms_adaptive")(
+    functools.partial(SMSScheduler, adaptive_p=True, sjf_prob=0.7))

@@ -7,6 +7,9 @@ exceed 1 burst per t_burst cycles per channel.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev dep; pip install -r "
+                    "requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import simulator as sim
