@@ -1,16 +1,24 @@
 # Tier-1 verification entry points. `make ci` is what the GitHub Actions
-# workflow runs: dev deps + the full suite, fail-fast.
+# workflow runs: dev deps + the full suite + a simulation-speed smoke run
+# (tiny cycle counts — catches trace-size/compile-time regressions),
+# fail-fast.
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test ci deps-dev quickstart
+.PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt
 
 test:
 	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.simspeed --smoke
+
+bench-simspeed:
+	$(PY) -m benchmarks.simspeed
 
 ci: deps-dev test
 

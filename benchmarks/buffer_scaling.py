@@ -20,9 +20,8 @@ def main(n_per_cat: int = 7, n_cycles: int = 12_000, force: bool = False):
         cfg = common.parity_config(fifo_size=fifo, dcs_size=dcs)
         wls = [w for w in wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
                if w.category in HI_CATS]
-        res = {p: common.run_policy(cfg, p, wls, n_cycles=n_cycles,
-                                    tag=f"buf_{fifo}_{dcs}", force=force)
-               for p in ("tcm", "sms")}
+        res = common.run_sweep(cfg, ("tcm", "sms"), wls, n_cycles=n_cycles,
+                               tag=f"buf_{fifo}_{dcs}", force=force)
         t, s = res["tcm"]["agg"], res["sms"]["agg"]
         print(f"{cfg.buf_entries},{t['weighted_speedup']:.3f},"
               f"{s['weighted_speedup']:.3f},{t['max_slowdown']:.2f},"

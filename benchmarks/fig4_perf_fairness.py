@@ -13,11 +13,9 @@ from repro.core import workloads as wl
 def main(n_per_cat: int = 15, n_cycles: int = 16_000, force: bool = False):
     cfg = common.parity_config()
     wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
-    results = {}
     t0 = time.time()
-    for pol in common.POLICIES:
-        results[pol] = common.run_policy(cfg, pol, wls, n_cycles=n_cycles,
-                                         tag="fig4", force=force)
+    results = common.run_sweep(cfg, common.POLICIES, wls, n_cycles=n_cycles,
+                               tag="fig4", force=force)
     us = (time.time() - t0) * 1e6 / max(len(wls) * len(common.POLICIES), 1)
 
     print("# Fig 4a — weighted speedup by category")

@@ -11,11 +11,10 @@ from repro.core import workloads as wl
 def main(n_per_cat: int = 15, n_cycles: int = 16_000, force: bool = False):
     cfg = common.parity_config()
     wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
-    results = {}
     t0 = time.time()
-    for pol in common.POLICIES:
-        results[pol] = common.run_policy(cfg, pol, wls, n_cycles=n_cycles,
-                                         tag="fig4", force=force)
+    # same tag as fig4: the combined-run cache is shared between figures
+    results = common.run_sweep(cfg, common.POLICIES, wls, n_cycles=n_cycles,
+                               tag="fig4", force=force)
     us = (time.time() - t0) * 1e6 / max(len(wls) * len(common.POLICIES), 1)
 
     print("# Fig 5a — CPU weighted speedup by category")

@@ -20,9 +20,8 @@ def main(n_per_cat: int = 7, n_cycles: int = 12_000, force: bool = False):
         cfg = common.parity_config(n_cpu=n_cpu, n_channels=4)  # paper: 4 MCs
         wls = [w for w in wl.make_workloads(n_cpu, n_per_cat=n_per_cat)
                if w.category in HI_CATS]
-        res = {p: common.run_policy(cfg, p, wls, n_cycles=n_cycles,
-                                    tag=f"fig6_c{n_cpu}", force=force)
-               for p in ("tcm", "sms")}
+        res = common.run_sweep(cfg, ("tcm", "sms"), wls, n_cycles=n_cycles,
+                               tag=f"fig6_c{n_cpu}", force=force)
         t, s = res["tcm"]["agg"], res["sms"]["agg"]
         gain = 100 * (s["weighted_speedup"] / t["weighted_speedup"] - 1)
         fx = t["max_slowdown"] / s["max_slowdown"]

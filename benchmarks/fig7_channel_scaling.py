@@ -19,9 +19,8 @@ def main(n_per_cat: int = 7, n_cycles: int = 12_000, force: bool = False):
         cfg = common.parity_config(n_channels=nc)
         wls = [w for w in wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
                if w.category in HI_CATS]
-        res = {p: common.run_policy(cfg, p, wls, n_cycles=n_cycles,
-                                    tag=f"fig7_ch{nc}", force=force)
-               for p in ("tcm", "sms")}
+        res = common.run_sweep(cfg, ("tcm", "sms"), wls, n_cycles=n_cycles,
+                               tag=f"fig7_ch{nc}", force=force)
         t, s = res["tcm"]["agg"], res["sms"]["agg"]
         gain = 100 * (s["weighted_speedup"] / t["weighted_speedup"] - 1)
         fx = t["max_slowdown"] / s["max_slowdown"]

@@ -33,9 +33,16 @@ def main() -> None:
     from benchmarks import (buffer_scaling, dash_deadline,
                             fig1_characteristics, fig4_perf_fairness,
                             fig5_cpu_gpu, fig6_core_scaling,
-                            fig7_channel_scaling, p_sensitivity, power_area)
+                            fig7_channel_scaling, p_sensitivity, power_area,
+                            simspeed)
 
     benches = [
+        # quick mode measures at reduced scale and must not overwrite the
+        # canonical BENCH_simspeed.json baseline comparison
+        ("simspeed", lambda: simspeed.main(
+            sweep_scale=dict(n_per_cat=2, n_cycles=2_000, warmup=500),
+            policy_scale=dict(n_per_cat=2, n_cycles=1_000, warmup=200),
+            write=False) if args.quick else simspeed.main()),
         ("fig1", lambda: fig1_characteristics.main(force=args.force)),
         ("fig4", lambda: fig4_perf_fairness.main(n_per_cat, cycles,
                                                  args.force)),

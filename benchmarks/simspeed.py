@@ -1,0 +1,157 @@
+"""Simulation-throughput benchmark: the perf trajectory of the cycle sim.
+
+Measures, per registered policy, steady-state simulation throughput
+(simulated cycles × workloads per wall-second) and trace+compile time
+(first call minus steady call), plus the wall-clock of the fig4-equivalent
+sweep (every registry policy, parity config, alone baselines included,
+force-run through `common.run_sweep` into a throwaway cache dir).
+
+Results land in ``BENCH_simspeed.json`` at the repo root. The file keeps
+two sections: ``baseline`` (the first measurement ever recorded — the
+pre-optimization reference) and ``current`` (refreshed on every full-scale
+run), plus the speedup ratio between them. Quick/smoke runs never touch
+the file, so the baseline comparison stays apples-to-apples.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.simspeed            # full, writes
+    PYTHONPATH=src python -m benchmarks.simspeed --smoke    # tiny, no write
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, Sequence
+
+import jax
+
+from benchmarks import common
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_simspeed.json"
+
+# canonical scales — change them only together with a fresh baseline
+SWEEP_SCALE = dict(n_per_cat=15, n_cycles=16_000, warmup=2_000)
+POLICY_SCALE = dict(n_per_cat=4, n_cycles=3_000, warmup=500)
+
+
+def measure_per_policy(policies: Sequence[str], n_per_cat: int,
+                       n_cycles: int, warmup: int) -> Dict[str, Dict]:
+    """First call (trace+compile+run) vs steady call, per policy."""
+    cfg = common.parity_config()
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+    pool, active = wl.pool_batch(cfg, wls)
+    W = len(wls)
+    out = {}
+    for pol in policies:
+        t0 = time.time()
+        sim.simulate(cfg, pol, pool, active, n_cycles, warmup)
+        t1 = time.time()
+        sim.simulate(cfg, pol, pool, active, n_cycles, warmup)
+        t2 = time.time()
+        out[pol] = {
+            "first_call_s": round(t1 - t0, 3),
+            "steady_s": round(t2 - t1, 3),
+            "compile_s": round((t1 - t0) - (t2 - t1), 3),
+            "cycles_per_s": round((n_cycles + warmup) * W / (t2 - t1), 1),
+        }
+    return out
+
+
+def measure_sweep(policies: Sequence[str], n_per_cat: int, n_cycles: int,
+                  warmup: int) -> Dict:
+    """Fig4-equivalent sweep wall-clock: all policies, parity config,
+    alone baselines included, cold caches (throwaway cache dir)."""
+    cfg = common.parity_config()
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+    n_alone = len(wl.alone_batch(cfg)[2])
+    saved_dir = common.EXP_DIR
+    with tempfile.TemporaryDirectory(prefix="simspeed_") as tmp:
+        common.EXP_DIR = Path(tmp)
+        try:
+            t0 = time.time()
+            common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
+                             warmup=warmup, tag="simspeed", force=True)
+            wall = time.time() - t0
+        finally:
+            common.EXP_DIR = saved_dir
+    cycw = (n_cycles + warmup) * (len(wls) + n_alone) * len(policies)
+    return {
+        "wall_s": round(wall, 2),
+        "cycle_workloads": cycw,
+        "cycles_per_s": round(cycw / wall, 1),
+        "n_workloads": len(wls), "n_alone": n_alone,
+        "n_cycles": n_cycles, "warmup": warmup,
+        "policies": list(policies),
+    }
+
+
+def main(sweep_scale: Dict = None, policy_scale: Dict = None,
+         write: bool = True) -> Dict:
+    sweep_scale = sweep_scale or SWEEP_SCALE
+    policy_scale = policy_scale or POLICY_SCALE
+    policies = list(sim.ALL_POLICIES)
+
+    t0 = time.time()
+    per_policy = measure_per_policy(policies, **policy_scale)
+    for pol, r in per_policy.items():
+        print(f"  {pol}: steady={r['steady_s']}s compile={r['compile_s']}s "
+              f"cycles_per_s={r['cycles_per_s']:,.0f}")
+    sweep = measure_sweep(policies, **sweep_scale)
+    print(f"  sweep: {sweep['wall_s']}s -> {sweep['cycles_per_s']:,.0f} "
+          f"cycle-workloads/s")
+
+    current = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "sweep_scale": dict(sweep_scale),
+            "policy_scale": dict(policy_scale),
+        },
+        "per_policy": per_policy,
+        "sweep": sweep,
+    }
+    data = {}
+    if BENCH_PATH.exists():
+        data = json.loads(BENCH_PATH.read_text())
+    if "baseline" not in data:
+        data["baseline"] = current
+    data["current"] = current
+    cur = current["sweep"]["cycles_per_s"]
+    # the baseline ratio is only meaningful at the baseline's own scale;
+    # never leave a stale ratio next to a differently-scaled "current"
+    same_scale = (data["baseline"]["meta"]["sweep_scale"]
+                  == current["meta"]["sweep_scale"])
+    if same_scale:
+        base = data["baseline"]["sweep"]["cycles_per_s"]
+        data["sweep_speedup_vs_baseline_x"] = round(cur / base, 2)
+    else:
+        data.pop("sweep_speedup_vs_baseline_x", None)
+    speedup = data.get("sweep_speedup_vs_baseline_x", "n/a")
+    if write:
+        BENCH_PATH.write_text(json.dumps(data, indent=1) + "\n")
+
+    us = (time.time() - t0) * 1e6 / max(len(policies), 1)
+    common.emit("simspeed", us,
+                f"sweep_cycles_per_s={cur:.0f};"
+                f"speedup_vs_baseline_x={speedup};written={write}")
+    return data
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny cycle counts, no BENCH file write — catches "
+                    "trace-size/compile-time regressions in CI")
+    args = ap.parse_args()
+    if args.smoke:
+        main(sweep_scale=dict(n_per_cat=1, n_cycles=300, warmup=100),
+             policy_scale=dict(n_per_cat=1, n_cycles=200, warmup=50),
+             write=False)
+    else:
+        main()

@@ -8,6 +8,7 @@ Completion ring: RING > max access latency, indexed by absolute cycle % RING.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Tuple
 
 import jax
@@ -18,6 +19,60 @@ from repro.core.params import SimConfig, SourcePool
 
 RING = 64
 NEG_T = -100_000
+
+
+@functools.lru_cache(maxsize=None)
+def addr_base(n_src: int, n_channels: int, n_banks: int) -> np.ndarray:
+    """Loop-invariant address-gen stripe origins, hoisted out of the
+    per-cycle step (embedded as a literal constant in the trace)."""
+    return (np.arange(n_src, dtype=np.int32) * 3) % (n_channels * n_banks)
+
+
+# ---------------------------------------------------------------------------
+# one-hot masked writes — the hot-loop replacement for scatter ops.
+# XLA:CPU lowers gather/scatter inside a scan body to serial per-element
+# loops; a compare-mask + select over the same (C, N) array fuses into the
+# surrounding elementwise work and is ~10x faster. All per-cycle state
+# updates with traced indices go through these.
+# ---------------------------------------------------------------------------
+
+def masked_set(a: jax.Array, idx: jax.Array, v, do: jax.Array) -> jax.Array:
+    """a[c, idx[c]] = v[c] where do[c]; a: (C, N), idx/do: (C,)."""
+    mask = (jnp.arange(a.shape[-1]) == idx[:, None]) & do[:, None]
+    if jnp.ndim(v) == 1:
+        v = v[:, None]
+    return jnp.where(mask, v, a)
+
+
+def masked_set2(a: jax.Array, idx1: jax.Array, idx2: jax.Array, v,
+                do: jax.Array) -> jax.Array:
+    """a[c, idx1[c], idx2[c]] = v[c] where do[c]; a: (C, M, N)."""
+    mask = (jnp.arange(a.shape[-2])[:, None] == idx1[:, None, None]) & \
+        (jnp.arange(a.shape[-1]) == idx2[:, None, None]) & \
+        do[:, None, None]
+    if jnp.ndim(v) == 1:
+        v = v[:, None, None]
+    return jnp.where(mask, v, a)
+
+
+def masked_add(a: jax.Array, idx: jax.Array, v, do: jax.Array) -> jax.Array:
+    """a[c, idx[c]] += v[c] where do[c]; a: (C, N), idx/do: (C,)."""
+    mask = (jnp.arange(a.shape[-1]) == idx[:, None]) & do[:, None]
+    if jnp.ndim(v) == 1:
+        v = v[:, None]
+    return a + mask.astype(a.dtype) * v
+
+
+def accum_by_index(acc: jax.Array, idx: jax.Array, v, do: jax.Array
+                   ) -> jax.Array:
+    """acc[idx[c]] += v[c] where do[c]; acc: (N,), idx/do: (C,).
+
+    Duplicate indices across channels accumulate, matching scatter-add.
+    """
+    onehot = (jnp.arange(acc.shape[0]) == idx[:, None]) & do[:, None]
+    if jnp.ndim(v) == 1:
+        v = v[:, None]
+    return acc + jnp.sum(onehot.astype(acc.dtype) * v, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -102,8 +157,7 @@ def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
     is_accel = pool["dl_period"] > 0          # real-time accelerator (DASH)
     is_cpu = ~is_gpu & ~is_accel
     # accelerators are DMA-like streaming engines: deep request queues
-    mshr = jnp.where(is_gpu, cfg.gpu_mshr,
-                     jnp.where(is_accel, cfg.gpu_mshr, cfg.cpu_mshr))
+    mshr = jnp.where(is_gpu | is_accel, cfg.gpu_mshr, cfg.cpu_mshr)
     room = st["outstanding"] < mshr
     # CPU: progress instructions while not blocked on a full window and not
     # waiting for MC admission
@@ -126,7 +180,7 @@ def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
     st["rng"] = rng2
     same = u < pool["rbl"]
     n_banks_total = cfg.n_channels * cfg.n_banks
-    base = (jnp.arange(S, dtype=jnp.int32) * 3) % n_banks_total
+    base = jnp.asarray(addr_base(S, cfg.n_channels, cfg.n_banks))
     new_ptr = st["bank_ptr"] + 1
     new_bank = (base + new_ptr % jnp.maximum(pool["blp"], 1)) % n_banks_total
     new_row = (u2 * cfg.n_rows).astype(jnp.int32)
@@ -157,7 +211,7 @@ def completions_tick(st: Dict[str, Any], dram: Dict[str, Any], t: jax.Array
     st["outstanding"] = st["outstanding"] - done
     st["completed"] = st["completed"] + done
     st["period_done"] = st["period_done"] + done
-    dram["ring"] = dram["ring"].at[slot].set(0)
+    dram["ring"] = dram["ring"].at[slot].set(0)     # scalar-index slice
     return st, dram
 
 
@@ -212,33 +266,28 @@ def issue_channels(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any],
     accumulators involved, so channels commute.
     """
     tm = cfg.timing
-    C = do_issue.shape[0]
-    cidx = jnp.arange(C)
     dram = dict(dram)
     st = dict(st)
     done = t + lat + tm.t_burst                                 # (C,)
-    safe_bank = jnp.where(do_issue, bank, 0)
-    wr_bank = lambda a, v: a.at[cidx, safe_bank].set(
-        jnp.where(do_issue, v, a[cidx, safe_bank]))
-    dram["bank_free"] = wr_bank(dram["bank_free"], done)
-    dram["open_row"] = wr_bank(dram["open_row"], row)
-    dram["open_valid"] = wr_bank(dram["open_valid"], True)
+    dram["bank_free"] = masked_set(dram["bank_free"], bank, done, do_issue)
+    dram["open_row"] = masked_set(dram["open_row"], bank, row, do_issue)
+    dram["open_valid"] = masked_set(dram["open_valid"], bank, True, do_issue)
     # activate bookkeeping (tFAW): replace the oldest entry per channel
     do_act = do_issue & ~is_hit
     amin = jnp.argmin(dram["act_ring"], axis=1)                 # (C,)
-    dram["act_ring"] = dram["act_ring"].at[cidx, amin].set(
-        jnp.where(do_act, t, dram["act_ring"][cidx, amin]))
+    dram["act_ring"] = masked_set(dram["act_ring"], amin, t, do_act)
     dram["bus_free"] = jnp.where(do_issue, done, dram["bus_free"])
-    safe_src = jnp.where(do_issue, src, 0)
+    # completion ring: a (RING, S) one-hot mask is heavier than this tiny
+    # 1-element-per-channel scatter-add, so the scatter stays
     slot = jnp.mod(done, RING)
+    safe_src = jnp.where(do_issue, src, 0)
     dram["ring"] = dram["ring"].at[slot, safe_src].add(
         jnp.where(do_issue, 1, 0))
-    dram["hits"] = dram["hits"].at[safe_src].add(
-        jnp.where(do_issue & is_hit, 1, 0))
-    dram["issued"] = dram["issued"].at[safe_src].add(
-        jnp.where(do_issue, 1, 0))
-    st["sum_lat"] = st["sum_lat"].at[safe_src].add(
-        jnp.where(do_issue, (done - birth).astype(jnp.float32), 0.0))
+    dram["hits"] = accum_by_index(dram["hits"], src, 1,
+                                  do_issue & is_hit)
+    dram["issued"] = accum_by_index(dram["issued"], src, 1, do_issue)
+    st["sum_lat"] = accum_by_index(
+        st["sum_lat"], src, (done - birth).astype(jnp.float32), do_issue)
     return dram, st
 
 

@@ -1,42 +1,47 @@
 """ATLAS (Kim et al., HPCA'10): rank sources by least attained service,
-recomputed every epoch with exponential decay."""
+recomputed every epoch with exponential decay.
+
+The attained-service totals only change at epoch boundaries, so the
+ranking argsort lives in `boundary_tick` behind a `lax.cond` on the scalar
+cycle counter — between epochs `score` is just a gather of the cached
+per-source priority.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import policy
-from repro.core.schedulers import (CentralizedPolicy, RANK_SHIFT, base_score,
-                                   rank_pos)
+from repro.core import engine, policy
+from repro.core.schedulers import CentralizedPolicy, RANK_SHIFT, rank_pos
 
 
 @policy.register
 class ATLAS(CentralizedPolicy):
     name = "atlas"
+    boundary_keys = ("attained", "served_epoch", "pri_src")
 
     def extra_state(self, cfg):
         S = cfg.n_src
         return {
             "attained": jnp.zeros((S,), jnp.float32),
             "served_epoch": jnp.zeros((S,), jnp.float32),
+            "pri_src": jnp.zeros((S,), jnp.int32),
         }
 
-    def policy_tick(self, cfg, pool, st, buf, t):
+    def boundary_pred(self, cfg, pool, st, buf, t):
+        return jnp.mod(t, cfg.atlas_epoch) == 0
+
+    def boundary_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
-        epoch = jnp.mod(t, cfg.atlas_epoch) == 0
+        S = cfg.n_src
         att = cfg.atlas_alpha * buf["attained"] + buf["served_epoch"]
-        buf["attained"] = jnp.where(epoch, att, buf["attained"])
-        buf["served_epoch"] = jnp.where(epoch, 0.0, buf["served_epoch"])
+        buf["attained"] = att
+        buf["served_epoch"] = jnp.zeros_like(buf["served_epoch"])
+        rank = rank_pos(att)                            # 0 = least attained
+        buf["pri_src"] = (S - rank).astype(jnp.int32) << RANK_SHIFT
         return buf
 
-    def score(self, cfg, pool, buf, is_hit, t):
-        S = cfg.n_src
-        rank = rank_pos(buf["attained"])                # 0 = least attained
-        pri = (S - rank[buf["src"]]).astype(jnp.int32) << RANK_SHIFT
-        return pri + base_score(cfg, buf, is_hit, t)
-
-    def on_issue(self, cfg, pool, buf, do, src, t):
+    def on_issue(self, cfg, pool, buf, do, pick, src, t):
         buf = dict(buf)
-        safe = jnp.where(do, src, 0)
-        buf["served_epoch"] = buf["served_epoch"].at[safe].add(
-            do.astype(jnp.float32))
+        buf["served_epoch"] = engine.accum_by_index(
+            buf["served_epoch"], src, 1.0, do)
         return buf

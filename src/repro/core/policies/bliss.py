@@ -5,21 +5,23 @@ Instead of a full application ranking, each channel watches the stream of
 issued requests: a source served `bliss_threshold` times consecutively is
 "interference-causing" and gets blacklisted. Scheduling is then just
 non-blacklisted > row-hit > age, and the blacklist is wiped every
-`bliss_clear_interval` cycles so sources are only penalized while they are
-actually streaming. State is ~20 lines: one (C,) last-served id, one (C,)
-streak counter, one (S,) blacklist bit-vector.
+`bliss_clear_interval` cycles (a `boundary_tick` cond on the scalar cycle
+counter) so sources are only penalized while they are actually streaming.
+State is ~20 lines: one (C,) last-served id, one (C,) streak counter, one
+(S,) blacklist bit-vector mirrored into the cached `pri_src` priority.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core import policy
-from repro.core.schedulers import CentralizedPolicy, POL_BIT, base_score
+from repro.core.schedulers import CentralizedPolicy, POL_BIT
 
 
 @policy.register
 class BLISS(CentralizedPolicy):
     name = "bliss"
+    boundary_keys = ("blacklist", "pri_src")
 
     def extra_state(self, cfg):
         C, S = cfg.n_channels, cfg.n_src
@@ -27,20 +29,19 @@ class BLISS(CentralizedPolicy):
             "bl_last": jnp.full((C,), -1, jnp.int32),
             "bl_streak": jnp.zeros((C,), jnp.int32),
             "blacklist": jnp.zeros((S,), bool),
+            "pri_src": jnp.full((S,), POL_BIT, jnp.int32),
         }
 
-    def policy_tick(self, cfg, pool, st, buf, t):
+    def boundary_pred(self, cfg, pool, st, buf, t):
+        return jnp.mod(t, cfg.bliss_clear_interval) == 0
+
+    def boundary_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
-        clear = jnp.mod(t, cfg.bliss_clear_interval) == 0
-        buf["blacklist"] = jnp.where(clear, False, buf["blacklist"])
+        buf["blacklist"] = jnp.zeros_like(buf["blacklist"])
+        buf["pri_src"] = jnp.full_like(buf["pri_src"], POL_BIT)
         return buf
 
-    def score(self, cfg, pool, buf, is_hit, t):
-        ok = ~buf["blacklist"][buf["src"]]              # (C, E)
-        return ok.astype(jnp.int32) * POL_BIT + \
-            base_score(cfg, buf, is_hit, t)
-
-    def on_issue(self, cfg, pool, buf, do, src, t):
+    def on_issue(self, cfg, pool, buf, do, pick, src, t):
         buf = dict(buf)
         same = do & (src == buf["bl_last"])
         streak = jnp.where(do, jnp.where(same, buf["bl_streak"] + 1, 1),
@@ -48,6 +49,8 @@ class BLISS(CentralizedPolicy):
         over = do & (streak >= cfg.bliss_threshold)
         buf["bl_last"] = jnp.where(do, src, buf["bl_last"])
         buf["bl_streak"] = jnp.where(over, 0, streak)
-        buf["blacklist"] = buf["blacklist"].at[
-            jnp.where(over, src, cfg.n_src)].set(True, mode="drop")
+        hit = jnp.any((jnp.arange(cfg.n_src) == src[:, None]) &
+                      over[:, None], axis=0)
+        buf["blacklist"] = buf["blacklist"] | hit
+        buf["pri_src"] = (~buf["blacklist"]).astype(jnp.int32) * POL_BIT
         return buf

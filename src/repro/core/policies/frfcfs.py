@@ -1,15 +1,13 @@
 """FR-FCFS: row hits first, then oldest (Rixner et al.). The baseline the
 paper starts from — maximal row-buffer locality, no source awareness, and
-therefore the GPU-favoring unfairness of Fig 1."""
+therefore the GPU-favoring unfairness of Fig 1. The inherited `score` is
+exactly the FR-FCFS base score (no cached priority slot)."""
 from __future__ import annotations
 
 from repro.core import policy
-from repro.core.schedulers import CentralizedPolicy, base_score
+from repro.core.schedulers import CentralizedPolicy
 
 
 @policy.register
 class FRFCFS(CentralizedPolicy):
     name = "frfcfs"
-
-    def score(self, cfg, pool, buf, is_hit, t):
-        return base_score(cfg, buf, is_hit, t)

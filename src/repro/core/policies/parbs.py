@@ -1,60 +1,114 @@
 """PAR-BS (Mutlu & Moscibroda, ISCA'08): batch the oldest `parbs_cap`
 requests per (source, bank), serve marked batches with shortest-job-first
-source ranking before anything unmarked."""
+source ranking before anything unmarked.
+
+The seed implementation re-ran an O(C·E log E) CAM sort plus an SJF argsort
+every cycle. Both are gone from the hot loop:
+
+  * `grank` — each entry's age rank within its (source, bank) group — is
+    maintained incrementally. Births are strictly increasing per source
+    (one pending register), so admission order IS birth order within a
+    group: a new entry's rank is just the group's current population, and
+    an issue decrements the rank of its younger group-mates. Remarking
+    becomes the elementwise test `valid & (grank < parbs_cap)`.
+  * remarking itself runs in `pre_tick` as a plain elementwise select — no
+    cond needed once the sort is gone;
+  * the SJF ranking of `marked_left` is recomputed in `boundary_tick`
+    behind a cond over (S,)-shaped state only, firing when the counts
+    changed: after a marked issue (tracked by `pend_dec`, consumed here so
+    `marked_left` keeps the exact recompute-at-tick timing) or when a
+    batch is exhausted and a new one forms (`remarked`).
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import policy
+from repro.core import engine, policy
 from repro.core.schedulers import (CentralizedPolicy, POL_BIT, RANK_SHIFT,
-                                   base_score, rank_pos)
+                                   rank_pos)
 
 
 @policy.register
 class PARBS(CentralizedPolicy):
     name = "parbs"
+    boundary_keys = ("marked_left", "pend_dec", "pri_src")
 
     def extra_state(self, cfg):
-        return {"marked_left": jnp.zeros((cfg.n_src,), jnp.int32)}
+        C, E, S = cfg.n_channels, cfg.buf_entries, cfg.n_src
+        return {
+            "marked_left": jnp.zeros((S,), jnp.int32),
+            "grank": jnp.zeros((C, E), jnp.int32),
+            "pend_dec": jnp.zeros((S,), jnp.int32),
+            "pri_src": jnp.zeros((S,), jnp.int32),
+            "remarked": jnp.zeros((), bool),
+        }
 
-    def policy_tick(self, cfg, pool, st, buf, t):
+    def on_admit(self, cfg, pool, st, buf, do, slot, src, t):
+        # the admitted entry is its group's youngest: rank = group size - 1
+        buf = dict(buf)
+        cidx = jnp.arange(cfg.n_channels)
+        safe = jnp.where(do, slot, 0)
+        bank = buf["bank"][cidx, safe]
+        grp = buf["valid"] & (buf["src"] == src[:, None]) & \
+            (buf["bank"] == bank[:, None])
+        rank = jnp.sum(grp, axis=1).astype(jnp.int32) - 1
+        buf["grank"] = engine.masked_set(buf["grank"], slot, rank, do)
+        return buf
+
+    def pre_tick(self, cfg, pool, st, buf, t):
+        # re-mark when no marked requests remain: with grank maintained
+        # incrementally this is a plain elementwise select, run every cycle
+        buf = dict(buf)
+        any_marked = jnp.any(buf["valid"] & buf["marked"])
+        buf["marked"] = jnp.where(any_marked, buf["marked"],
+                                  buf["valid"] & (buf["grank"]
+                                                  < cfg.parbs_cap))
+        buf["remarked"] = ~any_marked
+        return buf
+
+    def boundary_pred(self, cfg, pool, st, buf, t):
+        # fire on any marked-count change: a marked issue last cycle, or a
+        # fresh re-mark. Data-dependent, so under vmap this degrades to
+        # select — but the branch touches only (S,) state and the sort
+        # stays out of the per-cycle jaxpr.
+        return buf["remarked"] | jnp.any(buf["pend_dec"] != 0)
+
+    def boundary_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
         S = cfg.n_src
-        # re-mark when no marked requests remain anywhere
-        any_marked = jnp.any(buf["valid"] & buf["marked"])
+        # re-mark: recount from scratch (ground truth for the new batch);
+        # otherwise apply the deferred per-issue decrements. One-hot
+        # compare-and-reduce, not a scatter: XLA:CPU executes the dense
+        # reduction an order of magnitude faster inside the scan.
+        onehot = (buf["src"][..., None] == jnp.arange(S)) & \
+            (buf["marked"] & buf["valid"])[..., None]       # (C, E, S)
+        cnt = jnp.sum(onehot, axis=(0, 1)).astype(jnp.int32)
+        buf["marked_left"] = jnp.where(buf["remarked"], cnt,
+                                       buf["marked_left"] - buf["pend_dec"])
+        buf["pend_dec"] = jnp.zeros_like(buf["pend_dec"])
+        # shortest-job ranking: fewest marked = best
+        rank = rank_pos(buf["marked_left"])
+        buf["pri_src"] = (S - rank).astype(jnp.int32) << RANK_SHIFT
+        return buf
 
-        # per (channel, src, bank) age rank via one sort (O(E log E)):
-        # sort by (group, birth); rank-in-group = index - group_start
-        def remark_channel(valid, src, bank, birth):
-            E = valid.shape[0]
-            # int32-safe packing: group (<= 9 bits) above birth (21 bits)
-            group = jnp.where(valid, src * cfg.n_banks + bank, (1 << 9) - 1)
-            key = group * (1 << 21) + jnp.clip(birth, 0, (1 << 21) - 1)
-            order = jnp.argsort(key)
-            g_sorted = group[order]
-            new_seg = jnp.concatenate([jnp.array([True]),
-                                       g_sorted[1:] != g_sorted[:-1]])
-            seg_start = jax.lax.cummax(
-                jnp.where(new_seg, jnp.arange(E), 0))
-            rank_sorted = jnp.arange(E) - seg_start
-            rank = jnp.zeros((E,), jnp.int32).at[order].set(
-                rank_sorted.astype(jnp.int32))
-            return valid & (rank < cfg.parbs_cap)
-
-        new_marked = jax.vmap(remark_channel)(
-            buf["valid"], buf["src"], buf["bank"], buf["birth"])
-        buf["marked"] = jnp.where(any_marked, buf["marked"], new_marked)
-        # shortest-job ranking: total marked per src (fewest = best)
-        cnt = jnp.zeros((S,), jnp.int32).at[
-            jnp.where(buf["marked"] & buf["valid"], buf["src"], S)
-        ].add(1, mode="drop")
-        buf["marked_left"] = cnt
+    def on_issue(self, cfg, pool, buf, do, pick, src, t):
+        buf = dict(buf)
+        cidx = jnp.arange(cfg.n_channels)
+        safe = jnp.where(do, pick, 0)
+        bank = buf["bank"][cidx, safe]
+        birth = buf["birth"][cidx, safe]
+        was_marked = buf["marked"][cidx, safe]
+        # younger group-mates move up one rank
+        younger = buf["valid"] & (buf["src"] == src[:, None]) & \
+            (buf["bank"] == bank[:, None]) & \
+            (buf["birth"] > birth[:, None]) & do[:, None]
+        buf["grank"] = buf["grank"] - younger.astype(jnp.int32)
+        # defer the marked_left decrement to the next boundary_tick so the
+        # count keeps the seed's recompute-at-tick timing exactly
+        buf["pend_dec"] = engine.accum_by_index(
+            buf["pend_dec"], src, 1, do & was_marked)
         return buf
 
     def score(self, cfg, pool, buf, is_hit, t):
-        S = cfg.n_src
-        rank = rank_pos(buf["marked_left"])             # fewest marked = 0
-        pri = (S - rank[buf["src"]]).astype(jnp.int32) << RANK_SHIFT
-        return buf["marked"].astype(jnp.int32) * POL_BIT + pri + \
-            base_score(cfg, buf, is_hit, t)
+        return buf["marked"].astype(jnp.int32) * POL_BIT + \
+            super().score(cfg, pool, buf, is_hit, t)

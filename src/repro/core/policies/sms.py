@@ -23,7 +23,7 @@ class SMS:
 
     def tick(self, cfg, pool, st, sched, t):
         st, sched = sms_lib.stage1_admit(cfg, st, sched, t)
-        st, sched = sms_lib.stage2_drain(cfg, st, sched, t)
+        st, sched = sms_lib.stage2_drain(cfg, pool, st, sched, t)
         return st, sched
 
     def select(self, cfg, pool, st, sched, dram, t):

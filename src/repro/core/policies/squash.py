@@ -23,7 +23,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine, policy
-from repro.core.schedulers import CentralizedPolicy, POL_BIT, base_score
+from repro.core.schedulers import CentralizedPolicy, POL_BIT
 
 URGENT_BIT = POL_BIT << 1
 
@@ -31,6 +31,7 @@ URGENT_BIT = POL_BIT << 1
 @policy.register
 class SquashPrio(CentralizedPolicy):
     name = "squash_prio"
+    boundary_keys = ("sq_rng", "sq_prio")
 
     def extra_state(self, cfg):
         S = cfg.n_src
@@ -39,7 +40,22 @@ class SquashPrio(CentralizedPolicy):
             "sq_urgent": jnp.zeros((S,), bool),
             "sq_rng": (jnp.arange(S, dtype=jnp.uint32) * jnp.uint32(747796405)
                        + jnp.uint32(2891336453)),
+            "pri_src": jnp.zeros((S,), jnp.int32),
         }
+
+    def boundary_pred(self, cfg, pool, st, buf, t):
+        return jnp.mod(t, cfg.squash_epoch) == 0
+
+    def boundary_tick(self, cfg, pool, st, buf, t):
+        buf = dict(buf)
+        is_accel = pool["dl_period"] > 0
+        rng, u = engine.lcg_step(buf["sq_rng"])
+        p = jnp.where(is_accel, cfg.squash_pb,
+                      jnp.where(pool["is_gpu"], cfg.squash_gpu_pb,
+                                cfg.squash_cpu_pb))
+        buf["sq_rng"] = rng
+        buf["sq_prio"] = u < p
+        return buf
 
     def policy_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
@@ -48,27 +64,17 @@ class SquashPrio(CentralizedPolicy):
         # done/reqs < (phase + lead)/period. (A lead keeps the source from
         # asymptotically tracking the pace line and missing by a hair; a
         # permanently-urgent slack rule floods its own bank queue and does
-        # worse — measured in benchmarks/dash_deadline.)
+        # worse — measured in benchmarks/dash_deadline.) Urgency is
+        # per-cycle state (the paper's urgent bit), so it lives here, not
+        # in the epoch-gated boundary.
         phase = jnp.mod(t, jnp.maximum(pool["dl_period"], 1))
         remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
         buf["sq_urgent"] = is_accel & (remaining > 0) & \
             (st["period_done"] * pool["dl_period"]
              < (phase + cfg.squash_lead) * pool["dl_reqs"])
-        epoch = jnp.mod(t, cfg.squash_epoch) == 0
-        rng, u = engine.lcg_step(buf["sq_rng"])
-        p = jnp.where(is_accel, cfg.squash_pb,
-                      jnp.where(pool["is_gpu"], cfg.squash_gpu_pb,
-                                cfg.squash_cpu_pb))
-        buf["sq_rng"] = jnp.where(epoch, rng, buf["sq_rng"])
-        buf["sq_prio"] = jnp.where(epoch, u < p, buf["sq_prio"])
+        buf["pri_src"] = buf["sq_urgent"].astype(jnp.int32) * URGENT_BIT + \
+            buf["sq_prio"].astype(jnp.int32) * POL_BIT
         return buf
-
-    def score(self, cfg, pool, buf, is_hit, t):
-        src = buf["src"]
-        urgent = buf["sq_urgent"][src].astype(jnp.int32)    # (C, E)
-        pri = buf["sq_prio"][src].astype(jnp.int32)
-        return urgent * URGENT_BIT + pri * POL_BIT + \
-            base_score(cfg, buf, is_hit, t)
 
     def admit_key(self, cfg, pool, st, buf, t):
         # urgency reaches the admission port too: an urgent source's pending

@@ -1,18 +1,25 @@
 """TCM (Kim et al., MICRO'10): cluster sources into a latency-sensitive
 group (prioritized, ranked by ascending intensity) and a bandwidth group
-(rank-shuffled every quantum to spread interference)."""
+(rank-shuffled every quantum to spread interference).
+
+Clustering, ranking, and the shuffle only change at quantum boundaries, so
+all of it lives in `boundary_tick` behind a `lax.cond` on the scalar cycle
+counter; `score` gathers the cached per-source priority.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import policy
+from repro.core import engine, policy
 from repro.core.schedulers import (CentralizedPolicy, POL_BIT, RANK_SHIFT,
-                                   base_score, rank_pos)
+                                   rank_pos)
 
 
 @policy.register
 class TCM(CentralizedPolicy):
     name = "tcm"
+    boundary_keys = ("served_quant", "tcm_rank", "tcm_is_lat", "shuffle",
+                     "pri_src")
 
     def extra_state(self, cfg):
         S = cfg.n_src
@@ -21,12 +28,15 @@ class TCM(CentralizedPolicy):
             "tcm_rank": jnp.zeros((S,), jnp.int32),
             "tcm_is_lat": jnp.ones((S,), bool),
             "shuffle": jnp.zeros((), jnp.int32),
+            "pri_src": jnp.zeros((S,), jnp.int32),
         }
 
-    def policy_tick(self, cfg, pool, st, buf, t):
+    def boundary_pred(self, cfg, pool, st, buf, t):
+        return jnp.mod(t, cfg.tcm_quantum) == 0
+
+    def boundary_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
         S = cfg.n_src
-        quant = jnp.mod(t, cfg.tcm_quantum) == 0
         inten = buf["served_quant"]                     # MPKC proxy
         order = rank_pos(inten)                         # ascending intensity
         total = jnp.maximum(jnp.sum(inten), 1.0)
@@ -36,26 +46,20 @@ class TCM(CentralizedPolicy):
         is_lat_sorted = cum <= cfg.tcm_lat_frac * total
         new_is_lat = is_lat_sorted[order]
         # ranks: latency cluster by ascending intensity; bw cluster shuffled
-        shuf = buf["shuffle"] + quant.astype(jnp.int32)
+        shuf = buf["shuffle"] + 1
         lat_rank = order
         bw_rank = jnp.mod(order + shuf, S)
         new_rank = jnp.where(new_is_lat, lat_rank, bw_rank)
-        buf["tcm_is_lat"] = jnp.where(quant, new_is_lat, buf["tcm_is_lat"])
-        buf["tcm_rank"] = jnp.where(quant, new_rank, buf["tcm_rank"])
-        buf["served_quant"] = jnp.where(quant, 0.0, buf["served_quant"])
+        buf["tcm_is_lat"] = new_is_lat
+        buf["tcm_rank"] = new_rank
+        buf["served_quant"] = jnp.zeros_like(buf["served_quant"])
         buf["shuffle"] = shuf
+        buf["pri_src"] = new_is_lat.astype(jnp.int32) * POL_BIT + \
+            ((S - new_rank).astype(jnp.int32) << RANK_SHIFT)
         return buf
 
-    def score(self, cfg, pool, buf, is_hit, t):
-        S = cfg.n_src
-        src = buf["src"]
-        pri = (S - buf["tcm_rank"][src]).astype(jnp.int32) << RANK_SHIFT
-        return buf["tcm_is_lat"][src].astype(jnp.int32) * POL_BIT + pri + \
-            base_score(cfg, buf, is_hit, t)
-
-    def on_issue(self, cfg, pool, buf, do, src, t):
+    def on_issue(self, cfg, pool, buf, do, pick, src, t):
         buf = dict(buf)
-        safe = jnp.where(do, src, 0)
-        buf["served_quant"] = buf["served_quant"].at[safe].add(
-            do.astype(jnp.float32))
+        buf["served_quant"] = engine.accum_by_index(
+            buf["served_quant"], src, 1.0, do)
         return buf

@@ -144,12 +144,17 @@ def baseline_names() -> Tuple[str, ...]:
                  if getattr(p, "variant_of", None) is None)
 
 
-def make_step(cfg: SimConfig, pol: MemoryPolicy):
-    """One simulator cycle, generic over the policy object."""
+def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
+    """One simulator cycle, generic over the policy object.
+
+    `pool`/`active` are read-only per-workload parameters: they are closed
+    over here (broadcast into the trace) rather than threaded through the
+    scan carry, which keeps the carry pytree to genuinely cycle-varying
+    state only.
+    """
 
     def step(carry, t):
         st, sched, dram = carry
-        pool, active = st["_pool"], st["_active"]
         st, dram = engine.completions_tick(st, dram, t)
         st = engine.deadline_tick(cfg, pool, st, t)
         st = engine.source_tick(cfg, pool, st, active, t)

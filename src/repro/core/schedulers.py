@@ -7,11 +7,25 @@ that substrate as `CentralizedPolicy`, a base class for the protocol in
 `repro.core.policy`: subclasses (one module each under
 `repro.core.policies/`) override
 
-    extra_state(cfg)                  policy-private state arrays
-    policy_tick(cfg, pool, st, buf, t)    periodic maintenance (epochs,
-                                          quanta, batch remarking, ...)
-    score(cfg, pool, buf, is_hit, t)      (C, E) int32 lexicographic score
-    on_issue(cfg, pool, buf, do, src, t)  per-issue accounting hooks
+    extra_state(cfg)                       policy-private state arrays
+    boundary_pred(cfg, pool, st, buf, t)   scalar bool: run boundary_tick?
+                                           (None = policy has no boundary)
+    boundary_tick(cfg, pool, st, buf, t)   epoch/quantum/batch maintenance,
+                                           executed under `lax.cond`
+    policy_tick(cfg, pool, st, buf, t)     cheap per-cycle maintenance
+    score(cfg, pool, buf, is_hit, t)       (C, E) int32 lexicographic score
+    on_admit(cfg, pool, st, buf, do, slot, src, t)   per-admission hook
+    on_issue(cfg, pool, buf, do, pick, src, t)       per-issue hook (buf is
+                                                     the PRE-clear buffer)
+
+Hot-loop contract (see ROADMAP "hot-loop rules"): anything that sorts or
+ranks belongs in `boundary_tick`. A predicate that depends only on the
+scan's scalar cycle counter `t` stays unbatched under `vmap`, so the cond
+branch genuinely executes once per epoch; a data-dependent predicate
+degrades to `select` under `vmap` but still keeps the sort out of the
+unbatched per-cycle jaxpr. The default `score` adds a cached per-source
+priority (`buf["pri_src"]`, computed by `boundary_tick`) to the FR-FCFS
+base score, so no subclass ranks in `score`.
 
 Scores are lexicographic integers:
 
@@ -19,7 +33,9 @@ Scores are lexicographic integers:
 
 Buffer shapes: (C, E). Admission is one request per channel per cycle
 (single MC ingress port); half the entries are reserved for CPU sources
-(the paper's anti-starvation provisioning, §4). Admission and issue are
+(the paper's anti-starvation provisioning, §4): GPU occupancy is tracked
+by the incrementally-maintained `gpu_occ` counter (admit +1, issue -1)
+instead of an O(C·E) reduction each cycle. Admission and issue are
 expressed as whole-(C, ...) array ops — channels never appear as a Python
 loop, so trace size is independent of `n_channels`.
 """
@@ -40,12 +56,18 @@ POL_BIT = 1 << 22
 
 
 def buffer_state(cfg: SimConfig) -> Dict[str, Any]:
-    """The shared CAM buffer; policy-private arrays live in extra_state."""
+    """The shared CAM buffer; policy-private arrays live in extra_state.
+
+    `gpu_occ` mirrors `sum(valid & is_gpu_src[src])` per channel — admit
+    increments it, issue decrements it — so the CPU-reservation check never
+    re-scans the buffer.
+    """
     C, E = cfg.n_channels, cfg.buf_entries
     z = lambda dt: jnp.zeros((C, E), dt)
     return {
         "valid": z(bool), "src": z(jnp.int32), "bank": z(jnp.int32),
         "row": z(jnp.int32), "birth": z(jnp.int32), "marked": z(bool),
+        "gpu_occ": jnp.zeros((C,), jnp.int32),
     }
 
 
@@ -65,8 +87,12 @@ def admit(cfg: SimConfig, pool, st, buf, t, key=None):
     (default key: birth, i.e. oldest first).
 
     Enforces the CPU reservation: GPU sources are blocked while they hold
-    >= gpu_cap entries in that channel's buffer. Sources map to exactly one
-    channel, so all channels admit independently in one batched op.
+    >= gpu_cap entries in that channel's buffer (tracked by the `gpu_occ`
+    counter). Sources map to exactly one channel, so all channels admit
+    independently in one batched op.
+
+    Returns (st, buf, do, slot, src): per-channel admission outcome for
+    `on_admit` hooks.
     """
     S, C = cfg.n_src, cfg.n_channels
     is_gpu_src = pool["is_gpu"]
@@ -74,8 +100,7 @@ def admit(cfg: SimConfig, pool, st, buf, t, key=None):
     buf = dict(buf)
     cidx = jnp.arange(C)
     ch = engine.channel_of(cfg, st["pend_bank"])                # (S,)
-    gpu_cnt = jnp.sum(buf["valid"] & is_gpu_src[buf["src"]], axis=1)  # (C,)
-    gpu_ok = gpu_cnt < cfg.gpu_cap
+    gpu_ok = buf["gpu_occ"] < cfg.gpu_cap
     cand = st["pend_valid"][None, :] & (ch[None, :] == cidx[:, None]) \
         & (gpu_ok[:, None] | ~is_gpu_src[None, :])              # (C, S)
     has_free = ~jnp.all(buf["valid"], axis=1)                   # (C,)
@@ -84,8 +109,7 @@ def admit(cfg: SimConfig, pool, st, buf, t, key=None):
     s = jnp.argmin(key, axis=1)                                 # (C,)
     do = cand[cidx, s] & has_free
     slot = jnp.argmin(buf["valid"], axis=1)                     # first free
-    safe = jnp.where(do, slot, 0)
-    wr = lambda a, v: a.at[cidx, safe].set(jnp.where(do, v, a[cidx, safe]))
+    wr = lambda a, v: engine.masked_set(a, slot, v, do)
     buf["valid"] = wr(buf["valid"], True)
     buf["src"] = wr(buf["src"], s.astype(jnp.int32))
     buf["bank"] = wr(buf["bank"], engine.bank_in_channel(cfg,
@@ -93,28 +117,72 @@ def admit(cfg: SimConfig, pool, st, buf, t, key=None):
     buf["row"] = wr(buf["row"], st["pend_row"][s])
     buf["birth"] = wr(buf["birth"], st["pend_birth"][s])
     buf["marked"] = wr(buf["marked"], False)
-    st["pend_valid"] = st["pend_valid"].at[
-        jnp.where(do, s, S)].set(False, mode="drop")
-    return st, buf
+    buf["gpu_occ"] = buf["gpu_occ"] + \
+        (do & is_gpu_src[s]).astype(jnp.int32)
+    taken = jnp.any((jnp.arange(S) == s[:, None]) & do[:, None], axis=0)
+    st["pend_valid"] = st["pend_valid"] & ~taken
+    return st, buf, do, slot, s.astype(jnp.int32)
 
 
 class CentralizedPolicy:
-    """`MemoryPolicy` base for single-stage CAM-buffer schedulers."""
+    """`MemoryPolicy` base for single-stage CAM-buffer schedulers.
+
+    The per-cycle step is split in two: `policy_tick` runs every cycle and
+    must stay cheap (no sorts, no O(C·E) reductions for incrementally
+    maintainable state); `boundary_tick` holds the epoch/quantum/batch
+    maintenance — ranking sorts included — and executes under `lax.cond`
+    gated on `boundary_pred`.
+    """
 
     name = "centralized"
     variant_of = None
+
+    # keys `boundary_tick` may WRITE. The cond's operands/outputs are
+    # restricted to these (everything else is read through the closure), so
+    # the per-cycle step never copies or selects untouched (C, E) arrays
+    # through the conditional. Keep this to the small (S,)-shaped state.
+    boundary_keys: tuple = ()
 
     # -- per-policy hooks --------------------------------------------------
     def extra_state(self, cfg: SimConfig) -> Dict[str, Any]:
         return {}
 
+    def pre_tick(self, cfg: SimConfig, pool, st, buf, t):
+        """Per-cycle maintenance that must run BEFORE the boundary gate
+        (state that `boundary_pred`/`boundary_tick` read). Sort-free."""
+        return buf
+
+    def boundary_pred(self, cfg: SimConfig, pool, st, buf, t):
+        """Scalar bool gating `boundary_tick`; None = no boundary work.
+
+        Predicates that depend only on `t` stay unbatched under `vmap`, so
+        the gated branch truly runs once per epoch.
+        """
+        return None
+
+    def boundary_tick(self, cfg: SimConfig, pool, st, buf, t):
+        """Cond-gated maintenance: rank recomputes, shuffles. May read any
+        state but only write `boundary_keys`."""
+        return buf
+
     def policy_tick(self, cfg: SimConfig, pool, st, buf, t):
+        """Unconditional per-cycle maintenance; keep it sort-free."""
         return buf
 
     def score(self, cfg: SimConfig, pool, buf, is_hit, t) -> jax.Array:
-        raise NotImplementedError
+        """Default: cached per-source priority + FR-FCFS base score."""
+        s = base_score(cfg, buf, is_hit, t)
+        if "pri_src" in buf:
+            s = buf["pri_src"][buf["src"]] + s
+        return s
 
-    def on_issue(self, cfg: SimConfig, pool, buf, do, src, t):
+    def on_admit(self, cfg: SimConfig, pool, st, buf, do, slot, src, t):
+        """Per-admission accounting ((C,) vectors, after the buffer write)."""
+        return buf
+
+    def on_issue(self, cfg: SimConfig, pool, buf, do, pick, src, t):
+        """Per-issue accounting. `buf` is PRE-clear: entry `pick` still
+        holds the issued request's fields."""
         return buf
 
     def admit_key(self, cfg: SimConfig, pool, st, buf, t):
@@ -129,8 +197,22 @@ class CentralizedPolicy:
         return {**buffer_state(cfg), **self.extra_state(cfg)}
 
     def tick(self, cfg: SimConfig, pool, st, buf, t):
-        st, buf = admit(cfg, pool, st, buf, t,
-                        key=self.admit_key(cfg, pool, st, buf, t))
+        st, buf, do, slot, src = admit(
+            cfg, pool, st, buf, t,
+            key=self.admit_key(cfg, pool, st, buf, t))
+        buf = self.on_admit(cfg, pool, st, buf, do, slot, src, t)
+        buf = self.pre_tick(cfg, pool, st, buf, t)
+        pred = self.boundary_pred(cfg, pool, st, buf, t)
+        if pred is not None:
+            keys = self.boundary_keys
+
+            def run(sub):
+                new = self.boundary_tick(cfg, pool, st, {**buf, **sub}, t)
+                return {k: new[k] for k in keys}
+
+            sub = jax.lax.cond(pred, run, lambda s: s,
+                               {k: buf[k] for k in keys})
+            buf = {**buf, **sub}
         buf = self.policy_tick(cfg, pool, st, buf, t)
         return st, buf
 
@@ -152,11 +234,11 @@ class CentralizedPolicy:
         dram, st = engine.issue_channels(
             cfg, dram, st, do, at_pick(buf["bank"]), at_pick(buf["row"]),
             src, at_pick(buf["birth"]), at_pick(lat), at_pick(is_hit), t)
-        safe = jnp.where(do, pick, 0)
+        buf = self.on_issue(cfg, pool, buf, do, pick, src, t)
         buf = dict(buf)
-        clear = lambda a: a.at[cidx, safe].set(
-            jnp.where(do, False, a[cidx, safe]))
+        clear = lambda a: engine.masked_set(a, pick, False, do)
         buf["valid"] = clear(buf["valid"])
         buf["marked"] = clear(buf["marked"])
-        buf = self.on_issue(cfg, pool, buf, do, src, t)
+        buf["gpu_occ"] = buf["gpu_occ"] - \
+            (do & pool["is_gpu"][src]).astype(jnp.int32)
         return st, buf, dram

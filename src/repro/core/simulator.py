@@ -12,6 +12,7 @@ changes here.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Tuple
 
 import jax
@@ -38,27 +39,30 @@ def __getattr__(name: str):
         return policy_api.names()
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
-def _init(cfg: SimConfig, policy: str, pool, active):
-    """Resolve the policy and build (cfg, policy object, initial carry)."""
+def _init(cfg: SimConfig, policy: str):
+    """Resolve the policy and build (cfg, policy object, initial carry).
+
+    The carry holds only cycle-varying state; read-only workload parameters
+    (pool, active) are closed over in `policy.make_step`.
+    """
     pol = policy_api.get(policy)
     cfg = pol.configure(cfg)
-    st = engine.source_state(cfg)
-    st["_pool"] = pool
-    st["_active"] = active
-    return cfg, pol, (st, pol.init_state(cfg), engine.dram_state(cfg))
+    return cfg, pol, (engine.source_state(cfg), pol.init_state(cfg),
+                      engine.dram_state(cfg))
 
 
 def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-             pool: Dict[str, jax.Array], active: jax.Array
+             unroll: int, pool: Dict[str, jax.Array], active: jax.Array
              ) -> Dict[str, jax.Array]:
-    cfg, pol, carry = _init(cfg, policy, pool, active)
-    step = policy_api.make_step(cfg, pol)
-    carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup))
+    cfg, pol, carry = _init(cfg, policy)
+    step = policy_api.make_step(cfg, pol, pool, active)
+    carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup), unroll=unroll)
     st_w, _, dram_w = carry
     snap = {k: st_w[k] for k in _SNAP_KEYS}
     snap.update({k: dram_w[k] for k in _DRAM_SNAP})
     carry, _ = jax.lax.scan(step, carry,
-                            jnp.arange(warmup, warmup + n_cycles))
+                            jnp.arange(warmup, warmup + n_cycles),
+                            unroll=unroll)
     st_f, _, dram_f = carry
 
     cyc = jnp.float32(n_cycles)
@@ -81,10 +85,17 @@ def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
     }
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+# Per-cycle scan unroll factor. >1 trades trace size (compile time) for
+# fewer loop iterations; 1 is best for the compile-dominated sweeps.
+DEFAULT_UNROLL = 1
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
+                   donate_argnums=(5, 6))
 def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-               pool_batch, active_batch):
-    return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup, p, a)
+               unroll: int, pool_batch, active_batch):
+    return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup,
+                                          unroll, p, a)
                     )(pool_batch, active_batch)
 
 
@@ -96,15 +107,39 @@ def _fill_deadline_keys(pool: Dict[str, Any], shape) -> Dict[str, Any]:
     return pool
 
 
-def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
-             active_batch: np.ndarray, n_cycles: int = 20_000,
-             warmup: int = 2_000) -> Dict[str, np.ndarray]:
-    """pool_batch: dict of (W, S) arrays; active_batch: (W, S) bool."""
-    pool_batch = {k: jnp.asarray(v) for k, v in pool_batch.items()}
+def simulate_async(cfg: SimConfig, policy: str,
+                   pool_batch: Dict[str, np.ndarray],
+                   active_batch: np.ndarray, n_cycles: int = 20_000,
+                   warmup: int = 2_000,
+                   unroll: int = None) -> Dict[str, jax.Array]:
+    """Dispatch a batch sim and return DEVICE arrays without blocking.
+
+    JAX's async dispatch means the scan executes in the background; callers
+    (the benchmark sweeps) issue every policy's sim first and only then
+    convert to numpy, overlapping device compute with host post-processing.
+    Inputs are copied into fresh device buffers per call (`copy=True` — so
+    the donation to the jitted computation can never invalidate a caller's
+    live jax array).
+    """
+    pool_batch = {k: jnp.array(v, copy=True) for k, v in pool_batch.items()}
     pool_batch = _fill_deadline_keys(pool_batch, np.asarray(
         active_batch).shape)
-    out = _sim_batch(cfg, policy, n_cycles, warmup, pool_batch,
-                     jnp.asarray(active_batch))
+    with warnings.catch_warnings():
+        # donation is shape-matched: the f32 pool columns alias into the
+        # f32 metric outputs, the small int/bool ones can't — fine
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _sim_batch(cfg, policy, n_cycles, warmup,
+                          DEFAULT_UNROLL if unroll is None else unroll,
+                          pool_batch, jnp.array(active_batch, copy=True))
+
+
+def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
+             active_batch: np.ndarray, n_cycles: int = 20_000,
+             warmup: int = 2_000, unroll: int = None) -> Dict[str, np.ndarray]:
+    """pool_batch: dict of (W, S) arrays; active_batch: (W, S) bool."""
+    out = simulate_async(cfg, policy, pool_batch, active_batch, n_cycles,
+                         warmup, unroll)
     return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -117,8 +152,8 @@ def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
     """
     pool = _fill_deadline_keys(
         {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
-    cfg, pol, carry = _init(cfg, policy, pool, jnp.asarray(active))
-    step = policy_api.make_step(cfg, pol)
+    cfg, pol, carry = _init(cfg, policy)
+    step = policy_api.make_step(cfg, pol, pool, jnp.asarray(active))
 
     @jax.jit
     def run(carry):

@@ -38,6 +38,10 @@ def sms_state(cfg: SimConfig) -> Dict[str, Any]:
         # stage 1: per-source FIFOs
         "f_row": zi(C, S, F), "f_bank": zi(C, S, F), "f_birth": zi(C, S, F),
         "f_head": zi(C, S), "f_len": zi(C, S),
+        # front_run: length of the front same-(bank,row) run of each FIFO
+        # (the next batch), maintained incrementally at push/pop so stage 2
+        # never re-gathers the full (C,S,F) FIFO view
+        "front_run": zi(C, S),
         # stage 2: batch scheduler
         "drain_src": jnp.full((C,), -1, jnp.int32),
         "drain_left": zi(C),
@@ -49,55 +53,76 @@ def sms_state(cfg: SimConfig) -> Dict[str, Any]:
     }
 
 
-def _fifo_view(rows, banks, births, head, length, F):
-    """Return FIFO contents in age order + in-range mask. (..., F) arrays."""
-    idx = (head[..., None] + jnp.arange(F)) % F
-    take = lambda a: jnp.take_along_axis(a, idx, axis=-1)
-    in_range = jnp.arange(F) < length[..., None]
-    return take(rows), take(banks), take(births), in_range
+def _run_from_head(rows, banks, head, length, F):
+    """Front same-(bank,row) run length of one FIFO per channel.
+
+    rows/banks: (C, F) slot arrays; head/length: (C,). Only used on the
+    rare pop-exhausted-a-batch path, for the single drained source per
+    channel — O(C·F), not O(C·S·F).
+    """
+    idx = (head[:, None] + jnp.arange(F)) % F
+    rows_o = jnp.take_along_axis(rows, idx, axis=-1)
+    banks_o = jnp.take_along_axis(banks, idx, axis=-1)
+    in_r = jnp.arange(F) < length[:, None]
+    eq = (rows_o == rows_o[:, :1]) & (banks_o == banks_o[:, :1]) & in_r
+    return jnp.sum(jnp.cumprod(eq.astype(jnp.int32), axis=-1), axis=-1)
 
 
 def batch_info(cfg: SimConfig, sms: Dict[str, Any], t):
-    """(C,S) arrays: batch_len (front same-(bank,row) run) and readiness."""
-    F = cfg.fifo_size
-    rows_o, banks_o, births_o, in_r = _fifo_view(
-        sms["f_row"], sms["f_bank"], sms["f_birth"],
-        sms["f_head"], sms["f_len"], F)
-    eq = (rows_o == rows_o[..., :1]) & (banks_o == banks_o[..., :1]) & in_r
-    run = jnp.cumprod(eq.astype(jnp.int32), axis=-1)
-    batch_len = jnp.sum(run, axis=-1)                       # (C,S)
+    """(C,S) arrays: batch_len (front same-(bank,row) run) and readiness.
+
+    batch_len is the incrementally-maintained `front_run` counter; only the
+    head birth is gathered (O(C·S)), never the full FIFO contents.
+    """
+    batch_len = sms["front_run"]
     nonempty = sms["f_len"] > 0
     row_changed = batch_len < sms["f_len"]
-    aged = nonempty & (t - births_o[..., 0] >= cfg.batch_age_cap)
-    full = sms["f_len"] >= F
+    head_birth = jnp.take_along_axis(
+        sms["f_birth"], sms["f_head"][..., None], axis=-1)[..., 0]  # (C,S)
+    aged = nonempty & (t - head_birth >= cfg.batch_age_cap)
+    full = sms["f_len"] >= cfg.fifo_size
     ready = nonempty & (row_changed | aged | full)
     return batch_len, ready
 
 
 def stage1_admit(cfg: SimConfig, st, sms, t):
     """Decentralized admission: every source pushes into its own FIFO."""
-    S, F = cfg.n_src, cfg.fifo_size
+    C, S, F = cfg.n_channels, cfg.n_src, cfg.fifo_size
     st = dict(st)
     sms = dict(sms)
     ch = engine.channel_of(cfg, st["pend_bank"])            # (S,)
-    room = sms["f_len"][ch, jnp.arange(S)] < F
+    sidx = jnp.arange(S)
+    flen = sms["f_len"][ch, sidx]
+    room = flen < F
     do = st["pend_valid"] & room
-    slot = (sms["f_head"][ch, jnp.arange(S)] +
-            sms["f_len"][ch, jnp.arange(S)]) % F
-    cs, ss = jnp.where(do, ch, 0), jnp.arange(S)
-    slot_s = jnp.where(do, slot, 0)
-    wr = lambda a, v: a.at[cs, ss, slot_s].set(
-        jnp.where(do, v, a[cs, ss, slot_s]))
+    head = sms["f_head"][ch, sidx]
+    slot = (head + flen) % F
+    new_bank = engine.bank_in_channel(cfg, st["pend_bank"])
+    # each source maps to exactly one channel this cycle: one-hot masked
+    # writes (no scatters in the hot loop)
+    mask_cs = (jnp.arange(C)[:, None] == ch[None, :]) & do[None, :]  # (C,S)
+    mask_csf = mask_cs[:, :, None] & \
+        (jnp.arange(F)[None, None, :] == slot[None, :, None])     # (C,S,F)
+    # front_run: a push extends the front batch only when the whole FIFO is
+    # that batch (front_run == f_len) and the new request matches its
+    # (bank, row); a push into an empty FIFO starts a run of 1
+    fr = sms["front_run"][ch, sidx]
+    extend = (fr == flen) & \
+        (st["pend_row"] == sms["f_row"][ch, sidx, head]) & \
+        (new_bank == sms["f_bank"][ch, sidx, head])
+    new_fr = jnp.where(flen == 0, 1, jnp.where(extend, fr + 1, fr))
+    sms["front_run"] = jnp.where(mask_cs, new_fr[None, :],
+                                 sms["front_run"])
+    wr = lambda a, v: jnp.where(mask_csf, v[None, :, None], a)
     sms["f_row"] = wr(sms["f_row"], st["pend_row"])
-    sms["f_bank"] = wr(sms["f_bank"],
-                       engine.bank_in_channel(cfg, st["pend_bank"]))
+    sms["f_bank"] = wr(sms["f_bank"], new_bank)
     sms["f_birth"] = wr(sms["f_birth"], st["pend_birth"])
-    sms["f_len"] = sms["f_len"].at[cs, ss].add(jnp.where(do, 1, 0))
+    sms["f_len"] = sms["f_len"] + mask_cs.astype(jnp.int32)
     st["pend_valid"] = st["pend_valid"] & ~do
     return st, sms
 
 
-def stage2_drain(cfg: SimConfig, st, sms, t):
+def stage2_drain(cfg: SimConfig, pool, st, sms, t):
     """Pick ready batches (SJF w.p. p / RR w.p. 1-p) and drain 1 req/cycle."""
     C, S, F = cfg.n_channels, cfg.n_src, cfg.fifo_size
     B, D = cfg.n_banks, cfg.dcs_size
@@ -120,7 +145,6 @@ def stage2_drain(cfg: SimConfig, st, sms, t):
         # SMS-DASH (paper §7 / Usui et al.): a deadline source whose frame
         # slack is below its estimated remaining service time preempts the
         # SJF/RR choice; least-slack-first among urgent ready batches.
-        pool = st["_pool"]
         has_dl = pool["dl_period"] > 0
         remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
         time_left = pool["dl_period"] - jnp.mod(
@@ -157,20 +181,29 @@ def stage2_drain(cfg: SimConfig, st, sms, t):
     dcs_room = sms["d_len"][cidx, bank] < D
     do = draining & has_req & dcs_room
     # pop stage-1
-    sms["f_head"] = sms["f_head"].at[cidx, s].set(
-        jnp.where(do, (head + 1) % F, head))
-    sms["f_len"] = sms["f_len"].at[cidx, s].add(jnp.where(do, -1, 0))
+    new_head = jnp.where(do, (head + 1) % F, head)
+    new_len = sms["f_len"][cidx, s] - do.astype(jnp.int32)
+    sms["f_head"] = engine.masked_set(sms["f_head"], s, new_head, do)
+    sms["f_len"] = engine.masked_add(sms["f_len"], s, -1, do)
     sms["drain_left"] = sms["drain_left"] - do.astype(jnp.int32)
+    # front_run: the pop shortens the front batch by one; when it exhausts
+    # the batch with requests left, rescan just this source's FIFO (O(C·F))
+    # for the next batch's run length
+    fr = sms["front_run"][cidx, s] - do.astype(jnp.int32)
+    rescan = do & (fr == 0) & (new_len > 0)
+    fr = jnp.where(rescan,
+                   _run_from_head(sms["f_row"][cidx, s],
+                                  sms["f_bank"][cidx, s],
+                                  new_head, new_len, F),
+                   fr)
+    sms["front_run"] = engine.masked_set(sms["front_run"], s, fr, do)
     # push stage-3
     dslot = (sms["d_head"][cidx, bank] + sms["d_len"][cidx, bank]) % D
-    bsafe = jnp.where(do, bank, 0)
-    dsafe = jnp.where(do, dslot, 0)
-    wr = lambda a, v: a.at[cidx, bsafe, dsafe].set(
-        jnp.where(do, v, a[cidx, bsafe, dsafe]))
+    wr = lambda a, v: engine.masked_set2(a, bank, dslot, v, do)
     sms["d_row"] = wr(sms["d_row"], row)
     sms["d_src"] = wr(sms["d_src"], s.astype(jnp.int32))
     sms["d_birth"] = wr(sms["d_birth"], birth)
-    sms["d_len"] = sms["d_len"].at[cidx, bsafe].add(jnp.where(do, 1, 0))
+    sms["d_len"] = engine.masked_add(sms["d_len"], bank, 1, do)
     return st, sms
 
 
@@ -200,11 +233,10 @@ def stage3_issue(cfg: SimConfig, st, sms, dram, t):
     dram, st = engine.issue_channels(
         cfg, dram, st, do, pick, at_pick(row), at_pick(src), at_pick(birth),
         at_pick(lat), at_pick(is_hit), t)
-    psafe = jnp.where(do, pick, 0)
-    head_p = head[cidx, psafe]
-    sms["d_head"] = sms["d_head"].at[cidx, psafe].set(
-        jnp.where(do, (head_p + 1) % D, head_p))
-    sms["d_len"] = sms["d_len"].at[cidx, psafe].add(jnp.where(do, -1, 0))
+    head_p = head[cidx, jnp.where(do, pick, 0)]
+    sms["d_head"] = engine.masked_set(sms["d_head"], pick, (head_p + 1) % D,
+                                      do)
+    sms["d_len"] = engine.masked_add(sms["d_len"], pick, -1, do)
     sms["rr_bank"] = jnp.where(do, (pick + 1) % B,
                                sms["rr_bank"]).astype(jnp.int32)
     return st, sms, dram

@@ -1,0 +1,167 @@
+"""Hot-loop structural invariants for the per-cycle step.
+
+The perf contract of the cond-gated scheduler refactor, checked at the
+jaxpr level so a regression fails loudly instead of silently re-inflating
+the trace:
+
+  * sort primitives (argsort ranking, remark sorts) may appear ONLY inside
+    `cond` branches of the per-cycle step for every centralized policy —
+    never unconditionally;
+  * the ranked policies (atlas/parbs/tcm) actually HAVE their sorts behind
+    a cond (the check isn't vacuous);
+  * the scan carry holds only cycle-varying state: the read-only workload
+    parameters `_pool`/`_active` are closed over, not carried;
+  * the refactor is bit-identical: the golden digests for atlas/parbs/tcm
+    (captured pre-refactor) still match.
+"""
+import hashlib
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policy as policy_api
+from repro.core import simulator as sim
+from repro.core.params import SimConfig
+from repro.core.schedulers import CentralizedPolicy
+
+CFG = SimConfig(n_cpu=3, n_gpu=1, n_channels=2, buf_entries=24, fifo_size=5,
+                dcs_size=3)
+
+SORT_PRIMS = {"sort"}
+
+
+def _centralized_names():
+    return [n for n in policy_api.names()
+            if isinstance(policy_api.get(n), CentralizedPolicy)]
+
+
+def _dummy_pool(cfg):
+    S = cfg.n_src
+    pool = {k: jnp.zeros((S,), jnp.float32)
+            for k in ("mpki", "inst_per_miss", "rbl")}
+    pool.update(blp=jnp.ones((S,), jnp.int32),
+                is_gpu=jnp.zeros((S,), bool),
+                dl_period=jnp.zeros((S,), jnp.int32),
+                dl_reqs=jnp.zeros((S,), jnp.int32))
+    return pool
+
+
+def _sub_jaxprs(value):
+    try:                                  # jax >= 0.4.x new-style location
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:                   # older releases
+        from jax.core import ClosedJaxpr, Jaxpr
+    if isinstance(value, ClosedJaxpr):
+        return [value.jaxpr]
+    if isinstance(value, Jaxpr):
+        return [value]
+    if isinstance(value, (list, tuple)):
+        return [j for v in value for j in _sub_jaxprs(v)]
+    return []
+
+
+def _walk_prims(jaxpr, in_cond=False):
+    """Yield (primitive_name, inside_cond_branch) over all nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn.primitive.name, in_cond
+        child_in_cond = in_cond or eqn.primitive.name == "cond"
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from _walk_prims(sub, child_in_cond)
+
+
+def _step_jaxpr(policy_name):
+    cfg, pol, carry = sim._init(CFG, policy_name)
+    pool = _dummy_pool(cfg)
+    active = jnp.ones((cfg.n_src,), bool)
+    step = policy_api.make_step(cfg, pol, pool, active)
+    return jax.make_jaxpr(step)(carry, jnp.int32(5))
+
+
+@pytest.mark.parametrize("policy_name", _centralized_names())
+def test_no_unconditional_sorts_in_step(policy_name):
+    """Per-cycle jaxpr: sort ops only inside cond branches."""
+    jx = _step_jaxpr(policy_name)
+    uncond = [p for p, in_cond in _walk_prims(jx.jaxpr)
+              if p in SORT_PRIMS and not in_cond]
+    assert not uncond, (
+        f"{policy_name}: {len(uncond)} unconditional sort op(s) in the "
+        f"per-cycle step — ranking belongs in boundary_tick behind cond")
+
+
+@pytest.mark.parametrize("policy_name", ["atlas", "parbs", "tcm"])
+def test_ranked_policies_sort_inside_cond(policy_name):
+    """Non-vacuity: the ranked policies do sort, behind the boundary cond."""
+    jx = _step_jaxpr(policy_name)
+    gated = [p for p, in_cond in _walk_prims(jx.jaxpr)
+             if p in SORT_PRIMS and in_cond]
+    assert gated, f"{policy_name}: expected ranking sorts inside cond"
+
+
+def test_scan_carry_has_no_pool_or_active():
+    """The carry pytree holds only cycle-varying state."""
+    for name in sim.ALL_POLICIES:
+        _, _, (st, sched, dram) = sim._init(CFG, name)
+        for tree in (st, sched, dram):
+            assert "_pool" not in tree and "_active" not in tree, name
+        assert not any(k.startswith("_") for k in st), \
+            f"{name}: non-state key smuggled into the carry: {sorted(st)}"
+
+
+# ---------------------------------------------------------------------------
+# bit-identity re-check for the cond refactor (same protocol as
+# test_policy_registry, focused on the three re-ranked policies)
+# ---------------------------------------------------------------------------
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden_policy_states.json").read_text())
+
+
+def _golden_pool(cfg):
+    rng = np.random.RandomState(42)
+    S = cfg.n_src
+    mpki = rng.uniform(2, 40, S).astype(np.float32)
+    pool = {
+        "mpki": mpki,
+        "inst_per_miss": np.maximum(1000.0 / mpki, 1.0).astype(np.float32),
+        "rbl": rng.uniform(0.1, 0.95, S).astype(np.float32),
+        "blp": rng.randint(1, 7, S).astype(np.int32),
+        "is_gpu": np.asarray([False] * cfg.n_cpu + [True]),
+        "dl_period": np.zeros(S, np.int32),
+        "dl_reqs": np.zeros(S, np.int32),
+    }
+    pool["dl_period"][0] = 400
+    pool["dl_reqs"][0] = 35
+    return pool
+
+
+def _digest(tree):
+    out = {}
+    for key in sorted(tree):
+        if key.startswith("_"):
+            continue
+        v = np.ascontiguousarray(tree[key])
+        h = hashlib.sha1()
+        h.update(str(v.dtype).encode())
+        h.update(str(v.shape).encode())
+        h.update(v.tobytes())
+        out[key] = h.hexdigest()
+    return out
+
+
+@pytest.mark.parametrize("policy_name", ["atlas", "parbs", "tcm"])
+def test_cond_refactor_bit_identical(policy_name):
+    st_f, sched_f, dram_f = sim.simulate_debug(
+        CFG, policy_name, _golden_pool(CFG), np.ones(CFG.n_src, bool),
+        n_cycles=1_500)
+    g = GOLDEN[policy_name]
+    for part, tree in (("src", st_f), ("dram", dram_f)):
+        new = _digest(tree)
+        assert new == g[part], f"{policy_name} {part} diverged"
+    sched = _digest(sched_f)
+    for k in set(sched) & set(g["sched"]):
+        assert sched[k] == g["sched"][k], f"{policy_name} sched[{k}] diverged"
