@@ -89,23 +89,42 @@ def _save_alone(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
     path.write_text(json.dumps(alone, indent=1))
 
 
+def _stacked_fetch(dev, idx: int, box: Dict):
+    """Deferred (W, S) metric slice for policy `idx` of a stacked dispatch.
+
+    The first fetch of the group blocks on the shared device result and
+    converts it to numpy ONCE (cached in `box`); siblings reuse the host
+    copy instead of re-transferring the whole (W, P, S) stack.
+    """
+    def fetch() -> Dict[str, np.ndarray]:
+        if "m" not in box:
+            box["m"] = {k: np.asarray(v) for k, v in dev.items()}
+        return {k: v[:, idx] for k, v in box["m"].items()}
+    return fetch
+
+
 def run_sweep(cfg: SimConfig, policies: Sequence[str],
               workloads: Sequence[wl.Workload], n_cycles: int = 16_000,
               warmup: int = 2_000, seed: int = 7, tag: str = "",
-              force: bool = False) -> Dict[str, Dict]:
+              force: bool = False, stacked: bool = True) -> Dict[str, Dict]:
     """Alone-normalized per-workload metrics for each policy (cached).
 
-    Phase 1 issues every uncached policy's `_sim_batch` (async dispatch —
-    the call returns before the scan finishes); phase 2 blocks per policy
-    and post-processes while later policies still execute. A policy whose
-    alone baseline is uncached gets the 23 alone rows stacked into the same
-    batch as the workload rows: one compile + one dispatch instead of two.
+    Uncached policies that opt into the stacked execution path (the
+    `CentralizedPolicy` family — see `sim.stackable_names`) run as ONE
+    stacked dispatch: their states ride a leading policy axis through a
+    single scan, so the whole family costs one trace+compile instead of one
+    per policy. The rest (SMS-style protocols, configured variants) keep
+    the per-policy path, async-dispatched before any result is blocked on.
+    A policy whose alone baseline is uncached gets the alone rows stacked
+    into the same batch as the workload rows: one compile + one dispatch
+    either way. `stacked=False` forces the per-policy path everywhere
+    (benchmarks/simspeed.py uses it to measure the stacking win).
     """
     apool, aactive, amap = wl.alone_batch(cfg)
     n_alone = len(amap)
     pool, active = wl.pool_batch(cfg, workloads)
     results: Dict[str, Dict] = {}
-    pending = []
+    todo = []
     for pol in policies:
         key = _key(cfg, pol, tag or "std", n_cycles, warmup, seed,
                    len(workloads))
@@ -113,22 +132,52 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         if path.exists() and not force:
             results[pol] = json.loads(path.read_text())
             continue
-        alone = _load_alone(cfg, pol, n_cycles, warmup, force)
-        if alone is None:
-            batch_pool = {k: np.concatenate([apool[k], pool[k]])
-                          for k in pool}
-            batch_active = np.concatenate([aactive, active])
+        todo.append((pol, path, _load_alone(cfg, pol, n_cycles, warmup,
+                                            force)))
+
+    stackset = set(sim.stackable_names(cfg, [p for p, _, _ in todo])) \
+        if stacked else set()
+    # group stackable policies by batch composition (alone rows stacked in
+    # or not); a group of one has no compile to amortize — per-policy path
+    groups: Dict[bool, list] = {}
+    singles = []
+    for item in todo:
+        if item[0] in stackset:
+            groups.setdefault(item[2] is None, []).append(item)
         else:
-            batch_pool, batch_active = pool, active
+            singles.append(item)
+    for need_alone in list(groups):
+        if len(groups[need_alone]) == 1:
+            singles.extend(groups.pop(need_alone))
+
+    def batch_for(need_alone):
+        if need_alone:
+            return ({k: np.concatenate([apool[k], pool[k]]) for k in pool},
+                    np.concatenate([aactive, active]))
+        return pool, active
+
+    pending = []                        # (pol, path, alone, fetch)
+    for need_alone, items in groups.items():
+        batch_pool, batch_active = batch_for(need_alone)
+        dev = sim.simulate_stacked_async(
+            cfg, tuple(p for p, _, _ in items), batch_pool, batch_active,
+            n_cycles, warmup)
+        box: Dict = {}
+        for idx, (pol, path, alone) in enumerate(items):
+            pending.append((pol, path, alone, _stacked_fetch(dev, idx, box)))
+    for pol, path, alone in singles:
+        batch_pool, batch_active = batch_for(alone is None)
         dev = sim.simulate_async(cfg, pol, batch_pool, batch_active,
                                  n_cycles, warmup)
-        pending.append((pol, path, alone, dev))
-    for pol, path, alone, dev in pending:
+        pending.append((pol, path, alone,
+                        lambda dev=dev: {k: np.asarray(v)
+                                         for k, v in dev.items()}))
+    for pol, path, alone, fetch in pending:
         # elapsed_s = this policy's block + post-process segment only; the
         # dispatch/compile phase overlaps across policies and is reported
         # by benchmarks/simspeed.py as sweep wall-clock
         t0 = time.time()
-        m = {k: np.asarray(v) for k, v in dev.items()}   # blocks this policy
+        m = fetch()                                      # blocks this policy
         if alone is None:
             am = {k: v[:n_alone] for k, v in m.items()}
             m = {k: v[n_alone:] for k, v in m.items()}

@@ -2,9 +2,14 @@
 
 Measures, per registered policy, steady-state simulation throughput
 (simulated cycles × workloads per wall-second) and trace+compile time
-(first call minus steady call), plus the wall-clock of the fig4-equivalent
+(first call minus steady call); the cold-sweep wall-clock of the stackable
+`CentralizedPolicy` family both stacked (one XLA program) and per-policy
+("stacked_family" section); and the wall-clock of the fig4-equivalent
 sweep (every registry policy, parity config, alone baselines included,
-force-run through `common.run_sweep` into a throwaway cache dir).
+force-run through `common.run_sweep` into a throwaway cache dir). The
+sweep also counts compiled XLA programs and asserts the one-program
+property for the stacked family — `make bench-smoke` is the CI gate
+against accidental de-stacking.
 
 Results land in ``BENCH_simspeed.json`` at the repo root. The file keeps
 two sections: ``baseline`` (the first measurement ever recorded — the
@@ -29,6 +34,7 @@ from typing import Dict, Sequence
 import jax
 
 from benchmarks import common
+from repro import compat
 from repro.core import simulator as sim
 from repro.core import workloads as wl
 
@@ -37,6 +43,12 @@ BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_simspeed.json"
 # canonical scales — change them only together with a fresh baseline
 SWEEP_SCALE = dict(n_per_cat=15, n_cycles=16_000, warmup=2_000)
 POLICY_SCALE = dict(n_per_cat=4, n_cycles=3_000, warmup=500)
+# stacked-vs-per-policy family comparison: a COLD sweep of the stackable
+# CentralizedPolicy family both ways. Deliberately compile-dominated (short
+# cycle counts) — amortizing the per-policy trace+compile is exactly what
+# the stacked path is for. Must not collide with SWEEP_SCALE's static args
+# or the later all-policy sweep would find warm jit caches.
+FAMILY_SCALE = dict(n_per_cat=4, n_cycles=2_000, warmup=500)
 
 
 def measure_per_policy(policies: Sequence[str], n_per_cat: int,
@@ -62,6 +74,27 @@ def measure_per_policy(policies: Sequence[str], n_per_cat: int,
     return out
 
 
+def _xla_program_counts() -> Dict[str, int]:
+    """Distinct compiled XLA programs per sim entry point (jit cache sizes)."""
+    return {"stacked": compat.jit_cache_size(sim._sim_batch_stacked),
+            "per_policy": compat.jit_cache_size(sim._sim_batch)}
+
+
+def _cold_sweep(cfg, policies, wls, n_cycles, warmup, stacked, tag):
+    """force-run `run_sweep` into a throwaway cache dir; returns wall_s."""
+    saved_dir = common.EXP_DIR
+    with tempfile.TemporaryDirectory(prefix="simspeed_") as tmp:
+        common.EXP_DIR = Path(tmp)
+        try:
+            t0 = time.time()
+            common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
+                             warmup=warmup, tag=tag, force=True,
+                             stacked=stacked)
+            return time.time() - t0
+        finally:
+            common.EXP_DIR = saved_dir
+
+
 def measure_sweep(policies: Sequence[str], n_per_cat: int, n_cycles: int,
                   warmup: int) -> Dict:
     """Fig4-equivalent sweep wall-clock: all policies, parity config,
@@ -69,16 +102,10 @@ def measure_sweep(policies: Sequence[str], n_per_cat: int, n_cycles: int,
     cfg = common.parity_config()
     wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
     n_alone = len(wl.alone_batch(cfg)[2])
-    saved_dir = common.EXP_DIR
-    with tempfile.TemporaryDirectory(prefix="simspeed_") as tmp:
-        common.EXP_DIR = Path(tmp)
-        try:
-            t0 = time.time()
-            common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
-                             warmup=warmup, tag="simspeed", force=True)
-            wall = time.time() - t0
-        finally:
-            common.EXP_DIR = saved_dir
+    before = _xla_program_counts()
+    wall = _cold_sweep(cfg, policies, wls, n_cycles, warmup, stacked=True,
+                       tag="simspeed")
+    after = _xla_program_counts()
     cycw = (n_cycles + warmup) * (len(wls) + n_alone) * len(policies)
     return {
         "wall_s": round(wall, 2),
@@ -87,13 +114,34 @@ def measure_sweep(policies: Sequence[str], n_per_cat: int, n_cycles: int,
         "n_workloads": len(wls), "n_alone": n_alone,
         "n_cycles": n_cycles, "warmup": warmup,
         "policies": list(policies),
+        "xla_programs": {k: after[k] - before[k] for k in after},
+        "n_stackable": len(sim.stackable_names(cfg, policies)),
     }
 
 
+def measure_stacked_family(n_per_cat: int, n_cycles: int, warmup: int
+                           ) -> Dict:
+    """Cold-sweep wall-clock for the stackable CentralizedPolicy family,
+    stacked (one XLA program) vs per-policy (one program each)."""
+    cfg = common.parity_config()
+    fam = list(sim.stackable_names(cfg))
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+    out = {"policies": fam, "n_workloads": len(wls),
+           "n_cycles": n_cycles, "warmup": warmup}
+    for mode, stacked in (("stacked", True), ("per_policy", False)):
+        out[f"{mode}_wall_s"] = round(
+            _cold_sweep(cfg, fam, wls, n_cycles, warmup, stacked,
+                        tag=f"simspeed_{mode}"), 2)
+    out["stacked_speedup_x"] = round(
+        out["per_policy_wall_s"] / out["stacked_wall_s"], 2)
+    return out
+
+
 def main(sweep_scale: Dict = None, policy_scale: Dict = None,
-         write: bool = True) -> Dict:
+         family_scale: Dict = None, write: bool = True) -> Dict:
     sweep_scale = sweep_scale or SWEEP_SCALE
     policy_scale = policy_scale or POLICY_SCALE
+    family_scale = family_scale or FAMILY_SCALE
     policies = list(sim.ALL_POLICIES)
 
     t0 = time.time()
@@ -101,9 +149,23 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
     for pol, r in per_policy.items():
         print(f"  {pol}: steady={r['steady_s']}s compile={r['compile_s']}s "
               f"cycles_per_s={r['cycles_per_s']:,.0f}")
+    family = measure_stacked_family(**family_scale)
+    print(f"  stacked family ({len(family['policies'])} policies, cold): "
+          f"{family['stacked_wall_s']}s stacked vs "
+          f"{family['per_policy_wall_s']}s per-policy "
+          f"({family['stacked_speedup_x']}x)")
     sweep = measure_sweep(policies, **sweep_scale)
     print(f"  sweep: {sweep['wall_s']}s -> {sweep['cycles_per_s']:,.0f} "
-          f"cycle-workloads/s")
+          f"cycle-workloads/s; xla_programs={sweep['xla_programs']}")
+
+    # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
+    # program through the sweep, and only the SMS-style protocols may fall
+    # back to per-policy compiles — catches accidental de-stacking.
+    n_fallback = len(policies) - sweep["n_stackable"]
+    assert sweep["xla_programs"]["stacked"] == 1, \
+        f"centralized family de-stacked: {sweep['xla_programs']}"
+    assert sweep["xla_programs"]["per_policy"] == n_fallback, \
+        f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
 
     current = {
         "meta": {
@@ -112,8 +174,10 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
             "platform": platform.platform(),
             "sweep_scale": dict(sweep_scale),
             "policy_scale": dict(policy_scale),
+            "family_scale": dict(family_scale),
         },
         "per_policy": per_policy,
+        "stacked_family": family,
         "sweep": sweep,
     }
     data = {}
@@ -150,8 +214,11 @@ if __name__ == "__main__":
                     "trace-size/compile-time regressions in CI")
     args = ap.parse_args()
     if args.smoke:
+        # family/sweep smoke scales must differ in static args, or the
+        # sweep's compile-count assertion would find warm jit caches
         main(sweep_scale=dict(n_per_cat=1, n_cycles=300, warmup=100),
              policy_scale=dict(n_per_cat=1, n_cycles=200, warmup=50),
+             family_scale=dict(n_per_cat=1, n_cycles=250, warmup=50),
              write=False)
     else:
         main()

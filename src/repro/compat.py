@@ -1,0 +1,104 @@
+"""Version-compat shims for the pinned jax (0.4.37).
+
+Every deprecated/moved jax API the repo touches is funneled through this
+module, so a future jax bump is a one-file change:
+
+  * ``shard_map`` — lives at ``jax.experimental.shard_map.shard_map`` in the
+    pinned release (kwarg ``check_rep``) and at ``jax.shard_map`` (kwarg
+    ``check_vma``) after jax 0.6. The shim resolves whichever exists and
+    translates the check kwarg, so call sites can uniformly pass the modern
+    ``check_vma`` name.
+  * ``tree_map`` — ``jax.tree_map`` was removed; ``jax.tree_util.tree_map``
+    works on every release we care about (``jax.tree.map`` only post-0.4.25).
+  * jaxpr introspection types (``Jaxpr``/``ClosedJaxpr``) — moved from
+    ``jax.core`` to ``jax.extend.core``; plus the nested-jaxpr walkers the
+    perf-invariant tests share.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Iterator, Tuple
+
+import jax
+
+# ---------------------------------------------------------------------------
+# tree_map: one non-deprecated spelling for every supported release
+# ---------------------------------------------------------------------------
+
+tree_map = jax.tree_util.tree_map
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+
+def _resolve_shard_map():
+    """(impl, name_of_replication_check_kwarg) for this jax version."""
+    try:                                     # pinned 0.4.x location
+        from jax.experimental.shard_map import shard_map as impl
+    except ImportError:                      # jax >= 0.6: top-level
+        impl = jax.shard_map
+    params = inspect.signature(impl).parameters
+    for kw in ("check_vma", "check_rep"):
+        if kw in params:
+            return impl, kw
+    return impl, None
+
+
+_SHARD_MAP_IMPL, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """`jax.shard_map` signature (modern `check_vma` kwarg), any jax version."""
+    if _CHECK_KW is not None and _CHECK_KW not in kw:
+        kw[_CHECK_KW] = check_vma
+    return _SHARD_MAP_IMPL(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# jit cache introspection (private API, name has moved across releases)
+# ---------------------------------------------------------------------------
+
+
+def jit_cache_size(fn) -> int:
+    """Number of distinct compiled programs behind a jitted function."""
+    for attr in ("_cache_size", "cache_size"):
+        size = getattr(fn, attr, None)
+        if size is not None:
+            return size() if callable(size) else size
+    raise AttributeError(
+        f"no jit cache-size accessor on {fn!r} for jax {jax.__version__}; "
+        f"update repro.compat.jit_cache_size")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr introspection (moved out of jax.core)
+# ---------------------------------------------------------------------------
+
+try:                                         # jax >= 0.4.33 new-style location
+    from jax.extend.core import ClosedJaxpr, Jaxpr  # noqa: F401
+except ImportError:                          # older releases
+    from jax.core import ClosedJaxpr, Jaxpr  # noqa: F401
+
+
+def sub_jaxprs(value) -> list:
+    """All jaxprs hiding inside an eqn param value (list/tuple/closed)."""
+    if isinstance(value, ClosedJaxpr):
+        return [value.jaxpr]
+    if isinstance(value, Jaxpr):
+        return [value]
+    if isinstance(value, (list, tuple)):
+        return [j for v in value for j in sub_jaxprs(v)]
+    return []
+
+
+def walk_primitives(jaxpr, in_cond: bool = False
+                    ) -> Iterator[Tuple[str, bool]]:
+    """Yield (primitive_name, inside_cond_branch) over all nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn.primitive.name, in_cond
+        child_in_cond = in_cond or eqn.primitive.name == "cond"
+        for v in eqn.params.values():
+            for sub in sub_jaxprs(v):
+                yield from walk_primitives(sub, child_in_cond)

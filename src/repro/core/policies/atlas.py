@@ -18,6 +18,9 @@ from repro.core.schedulers import CentralizedPolicy, RANK_SHIFT, rank_pos
 class ATLAS(CentralizedPolicy):
     name = "atlas"
     boundary_keys = ("attained", "served_epoch", "pri_src")
+    # stacked schema: (S,) attained/served_epoch/pri_src; tick writes are
+    # boundary-only (the default), on_issue maintains the service counter
+    stacked_issue_keys = ("served_epoch",)
 
     def extra_state(self, cfg):
         S = cfg.n_src

@@ -22,6 +22,9 @@ from repro.core.schedulers import CentralizedPolicy, POL_BIT
 class BLISS(CentralizedPolicy):
     name = "bliss"
     boundary_keys = ("blacklist", "pri_src")
+    # stacked schema: (C,) streak trackers + (S,) blacklist/pri_src; the
+    # whole blacklisting state machine lives in on_issue
+    stacked_issue_keys = ("bl_last", "bl_streak", "blacklist", "pri_src")
 
     def extra_state(self, cfg):
         C, S = cfg.n_channels, cfg.n_src

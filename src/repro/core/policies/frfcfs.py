@@ -11,3 +11,7 @@ from repro.core.schedulers import CentralizedPolicy
 @policy.register
 class FRFCFS(CentralizedPolicy):
     name = "frfcfs"
+    # stacked (the CentralizedPolicy default): contributes no extra state;
+    # hooks write nothing, so both stacked write-sets stay empty. Under the
+    # padded union schema the zero `pri_src` from ranked siblings adds 0 to
+    # the default score — bit-identical to the standalone path.

@@ -32,6 +32,11 @@ from repro.core.schedulers import (CentralizedPolicy, POL_BIT, RANK_SHIFT,
 class PARBS(CentralizedPolicy):
     name = "parbs"
     boundary_keys = ("marked_left", "pend_dec", "pri_src")
+    # stacked schema: (C, E) grank + (S,) batch counters + scalar remarked.
+    # Beyond the boundary keys, on_admit seeds grank, pre_tick re-marks
+    # (marked/remarked), and on_issue shifts grank / defers the decrement.
+    stacked_tick_keys = boundary_keys + ("grank", "marked", "remarked")
+    stacked_issue_keys = ("grank", "pend_dec")
 
     def extra_state(self, cfg):
         C, E, S = cfg.n_channels, cfg.buf_entries, cfg.n_src

@@ -14,6 +14,9 @@ from repro.core import policy, sms as sms_lib
 class SMS:
     name = "sms"
     variant_of = None
+    # staged FIFO/DCS state shares nothing with the centralized CAM-buffer
+    # schema — SMS-style protocols run the per-policy path
+    stackable = False
 
     def configure(self, cfg):
         return cfg

@@ -32,6 +32,9 @@ URGENT_BIT = POL_BIT << 1
 class SquashPrio(CentralizedPolicy):
     name = "squash_prio"
     boundary_keys = ("sq_rng", "sq_prio")
+    # stacked schema: (S,) rng/priority/urgency; the per-cycle policy_tick
+    # writes sq_urgent + pri_src on top of the boundary draw
+    stacked_tick_keys = boundary_keys + ("sq_urgent", "pri_src")
 
     def extra_state(self, cfg):
         S = cfg.n_src

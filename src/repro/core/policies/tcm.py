@@ -20,6 +20,9 @@ class TCM(CentralizedPolicy):
     name = "tcm"
     boundary_keys = ("served_quant", "tcm_rank", "tcm_is_lat", "shuffle",
                      "pri_src")
+    # stacked schema: (S,) cluster/rank state + scalar shuffle; tick writes
+    # are boundary-only (the default), on_issue maintains the quantum counter
+    stacked_issue_keys = ("served_quant",)
 
     def extra_state(self, cfg):
         S = cfg.n_src

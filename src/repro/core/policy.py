@@ -144,6 +144,18 @@ def baseline_names() -> Tuple[str, ...]:
                  if getattr(p, "variant_of", None) is None)
 
 
+def is_stackable(name: str, cfg: SimConfig) -> bool:
+    """True if `name` opts into the stacked cross-policy execution path.
+
+    Stackability is declared by the policy (`stackable = True`, see
+    `CentralizedPolicy`) AND requires `configure` to leave cfg untouched —
+    stacked slices share one static config, so a policy that bakes knobs in
+    (e.g. sms_dash) must run the per-policy path.
+    """
+    pol = get(name)
+    return bool(getattr(pol, "stackable", False)) and pol.configure(cfg) == cfg
+
+
 def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
     """One simulator cycle, generic over the policy object.
 

@@ -143,6 +143,21 @@ class CentralizedPolicy:
     # through the conditional. Keep this to the small (S,)-shaped state.
     boundary_keys: tuple = ()
 
+    # -- cross-policy stacking contract (see `make_stacked_step`) -----------
+    # A stackable policy agrees to run with its state padded to the family
+    # union schema (extra keys from sibling policies present but zero) and
+    # with `configure` leaving cfg untouched. Opt out with `stackable =
+    # False` for state that cannot be padded (or schema-colliding keys).
+    stackable: bool = True
+    # buf keys the tick-side hooks (on_admit/pre_tick/boundary_tick/
+    # policy_tick) may WRITE. None = `boundary_keys`. The stacked step
+    # re-stacks only the union of these across the family; an undeclared
+    # write is silently dropped on the stacked path (and caught by the
+    # golden-digest equivalence test).
+    stacked_tick_keys: tuple = None
+    # buf keys `on_issue` may WRITE (default: none).
+    stacked_issue_keys: tuple = ()
+
     # -- per-policy hooks --------------------------------------------------
     def extra_state(self, cfg: SimConfig) -> Dict[str, Any]:
         return {}
@@ -196,10 +211,10 @@ class CentralizedPolicy:
     def init_state(self, cfg: SimConfig) -> Dict[str, Any]:
         return {**buffer_state(cfg), **self.extra_state(cfg)}
 
-    def tick(self, cfg: SimConfig, pool, st, buf, t):
-        st, buf, do, slot, src = admit(
-            cfg, pool, st, buf, t,
-            key=self.admit_key(cfg, pool, st, buf, t))
+    def tick_hooks(self, cfg: SimConfig, pool, st, buf, do, slot, src, t):
+        """Everything policy-specific between admission and selection:
+        per-admission accounting, cheap maintenance, the cond-gated boundary
+        work. The stacked step dispatches here per policy slice."""
         buf = self.on_admit(cfg, pool, st, buf, do, slot, src, t)
         buf = self.pre_tick(cfg, pool, st, buf, t)
         pred = self.boundary_pred(cfg, pool, st, buf, t)
@@ -214,31 +229,173 @@ class CentralizedPolicy:
                                {k: buf[k] for k in keys})
             buf = {**buf, **sub}
         buf = self.policy_tick(cfg, pool, st, buf, t)
+        return buf
+
+    def tick(self, cfg: SimConfig, pool, st, buf, t):
+        st, buf, do, slot, src = admit(
+            cfg, pool, st, buf, t,
+            key=self.admit_key(cfg, pool, st, buf, t))
+        buf = self.tick_hooks(cfg, pool, st, buf, do, slot, src, t)
         return st, buf
 
     def select(self, cfg: SimConfig, pool, st, buf, dram, t):
         """Pick + issue at most one request per channel (all channels at
         once; cross-channel state only meets in commutative scatter-adds)."""
-        C = cfg.n_channels
-        cidx = jnp.arange(C)
-        elig, lat, is_hit = jax.vmap(
-            lambda c, bank, row, valid: engine.eligibility(
-                cfg, dram, c, bank, row, valid, t)
-        )(cidx, buf["bank"], buf["row"], buf["valid"])          # (C, E) each
+        elig, lat, is_hit = eligibility_grid(cfg, buf, dram, t)
         score = self.score(cfg, pool, buf, is_hit, t)
         score = jnp.where(elig, score, -1)
-        pick = jnp.argmax(score, axis=1)                        # (C,)
-        at_pick = lambda a: jnp.take_along_axis(a, pick[:, None], 1)[:, 0]
-        do = at_pick(score) >= 0
-        src = at_pick(buf["src"])
-        dram, st = engine.issue_channels(
-            cfg, dram, st, do, at_pick(buf["bank"]), at_pick(buf["row"]),
-            src, at_pick(buf["birth"]), at_pick(lat), at_pick(is_hit), t)
+        st, dram, do, pick, src = issue_picked(cfg, st, buf, dram, score,
+                                               lat, is_hit, t)
         buf = self.on_issue(cfg, pool, buf, do, pick, src, t)
-        buf = dict(buf)
-        clear = lambda a: engine.masked_set(a, pick, False, do)
-        buf["valid"] = clear(buf["valid"])
-        buf["marked"] = clear(buf["marked"])
-        buf["gpu_occ"] = buf["gpu_occ"] - \
-            (do & pool["is_gpu"][src]).astype(jnp.int32)
+        buf = clear_picked(cfg, pool, buf, do, pick, src)
         return st, buf, dram
+
+
+def eligibility_grid(cfg: SimConfig, buf, dram, t):
+    """Per-entry issue legality for every channel: (C, E) elig/lat/is_hit."""
+    cidx = jnp.arange(cfg.n_channels)
+    return jax.vmap(
+        lambda c, bank, row, valid: engine.eligibility(
+            cfg, dram, c, bank, row, valid, t)
+    )(cidx, buf["bank"], buf["row"], buf["valid"])
+
+
+def issue_picked(cfg: SimConfig, st, buf, dram, score, lat, is_hit, t):
+    """argmax the masked score per channel and commit the issue to DRAM.
+
+    Returns (st, dram, do, pick, src); `buf` is untouched (still pre-clear)
+    so `on_issue` hooks can read the issued entry's fields.
+    """
+    pick = jnp.argmax(score, axis=1)                            # (C,)
+    at_pick = lambda a: jnp.take_along_axis(a, pick[:, None], 1)[:, 0]
+    do = at_pick(score) >= 0
+    src = at_pick(buf["src"])
+    dram, st = engine.issue_channels(
+        cfg, dram, st, do, at_pick(buf["bank"]), at_pick(buf["row"]),
+        src, at_pick(buf["birth"]), at_pick(lat), at_pick(is_hit), t)
+    return st, dram, do, pick, src
+
+
+def clear_picked(cfg: SimConfig, pool, buf, do, pick, src):
+    """Free the issued entries and settle the GPU-occupancy counter."""
+    buf = dict(buf)
+    clear = lambda a: engine.masked_set(a, pick, False, do)
+    buf["valid"] = clear(buf["valid"])
+    buf["marked"] = clear(buf["marked"])
+    buf["gpu_occ"] = buf["gpu_occ"] - \
+        (do & pool["is_gpu"][src]).astype(jnp.int32)
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# Stacked cross-policy execution: the whole CentralizedPolicy family as ONE
+# scan step / ONE XLA program.
+#
+# The centralized policies share the buffer layout and the engine half of
+# the cycle; they differ only in the hook bodies. So: pad every policy's
+# state to the union schema, stack the states on a leading P axis, and per
+# cycle run the policy-independent work (source/completion ticks, admission,
+# eligibility, issue, clear) ONCE, vmapped over the policy axis, while the
+# policy-specific hooks dispatch on the per-policy index over slices of the
+# stacked state.
+#
+# Why the dispatch is per-slice (trace-time index) and not a traced
+# `lax.switch` under `vmap`: with the policy index batched, jax's cond/switch
+# batching rule inlines ALL branches and select_n's the results — including
+# dissolving each branch's *nested* boundary `lax.cond` even when its
+# predicate depends only on the scalar cycle counter (measured on the pinned
+# jax 0.4.37). That would run every policy's ranking sort every cycle for
+# every slice: O(P^2) hook work and a direct violation of hot-loop rule 1.
+# Dispatching on the concrete per-policy index keeps exactly one hook body
+# per slice in the trace and keeps every t-only boundary predicate unbatched
+# (a genuine cond), while the whole family still compiles as one program.
+# ---------------------------------------------------------------------------
+
+
+def stacked_union_state(cfg: SimConfig, pols) -> list:
+    """Per-policy init states padded to the family union schema.
+
+    Returns a list of dicts (same keys, same shapes/dtypes) ready to stack
+    on a leading P axis. A key claimed by two policies with different
+    shape/dtype is a schema collision and refuses to stack.
+    """
+    states = [p.init_state(cfg) for p in pols]
+    union: Dict[str, Any] = {}
+    owner: Dict[str, str] = {}
+    for p, s in zip(pols, states):
+        for k, v in s.items():
+            if k in union:
+                if union[k].shape != v.shape or union[k].dtype != v.dtype:
+                    raise ValueError(
+                        f"stacked schema collision on {k!r}: "
+                        f"{owner[k]} has {union[k].shape}/{union[k].dtype}, "
+                        f"{p.name} has {v.shape}/{v.dtype}")
+            else:
+                union[k] = jnp.zeros(v.shape, v.dtype)
+                owner[k] = p.name
+    return [{**union, **s} for s in states]
+
+
+def _stack_trees(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _slice_tree(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def make_stacked_step(cfg: SimConfig, pols, pool, active):
+    """One simulator cycle for P stacked centralized policies.
+
+    The carry is the usual (st, buf, dram) triple with every leaf carrying a
+    leading P axis (buf padded to the union schema). Policy-independent work
+    runs once, vmapped over P; `admit_key`/`tick_hooks`/`score`/`on_issue`
+    dispatch per policy slice, and only the union of each policy family's
+    declared write-sets is re-stacked — untouched padding rides through the
+    carry unchanged.
+    """
+    P = len(pols)
+    tick_union = sorted(set().union(*(
+        p.stacked_tick_keys if p.stacked_tick_keys is not None
+        else p.boundary_keys for p in pols)))
+    issue_union = sorted(set().union(*(p.stacked_issue_keys for p in pols)))
+    vP = jax.vmap
+
+    def step(carry, t):
+        st, buf, dram = carry
+        st, dram = vP(lambda s, d: engine.completions_tick(s, d, t)
+                      )(st, dram)
+        st = vP(lambda s: engine.deadline_tick(cfg, pool, s, t))(st)
+        st = vP(lambda s: engine.source_tick(cfg, pool, s, active, t))(st)
+        # admission: policy-ordered key per slice, one merged admit
+        key = jnp.stack([
+            p.admit_key(cfg, pool, _slice_tree(st, i), _slice_tree(buf, i), t)
+            for i, p in enumerate(pols)])
+        st, buf, do, slot, src = vP(
+            lambda s, b, k: admit(cfg, pool, s, b, t, key=k))(st, buf, key)
+        new = [p.tick_hooks(cfg, pool, _slice_tree(st, i),
+                            _slice_tree(buf, i), do[i], slot[i], src[i], t)
+               for i, p in enumerate(pols)]
+        buf = {**buf, **{k: jnp.stack([n[k] for n in new])
+                         for k in tick_union}}
+        # selection: merged eligibility/issue, per-slice score + on_issue
+        elig, lat, is_hit = vP(
+            lambda b, d: eligibility_grid(cfg, b, d, t))(buf, dram)
+        score = jnp.stack([
+            p.score(cfg, pool, _slice_tree(buf, i), is_hit[i], t)
+            for i, p in enumerate(pols)])
+        score = jnp.where(elig, score, -1)
+        st, dram, do, pick, src = vP(
+            lambda s, b, d, sc, la, hi: issue_picked(cfg, s, b, d, sc, la,
+                                                     hi, t)
+        )(st, buf, dram, score, lat, is_hit)
+        if issue_union:
+            new = [p.on_issue(cfg, pool, _slice_tree(buf, i), do[i], pick[i],
+                              src[i], t) for i, p in enumerate(pols)]
+            buf = {**buf, **{k: jnp.stack([n[k] for n in new])
+                             for k in issue_union}}
+        buf = vP(lambda b, d, pk, sr: clear_picked(cfg, pool, b, d, pk, sr)
+                 )(buf, do, pick, src)
+        return (st, buf, dram), None
+
+    return step

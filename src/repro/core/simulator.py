@@ -51,11 +51,13 @@ def _init(cfg: SimConfig, policy: str):
                       engine.dram_state(cfg))
 
 
-def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-             unroll: int, pool: Dict[str, jax.Array], active: jax.Array
-             ) -> Dict[str, jax.Array]:
-    cfg, pol, carry = _init(cfg, policy)
-    step = policy_api.make_step(cfg, pol, pool, active)
+def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
+                      ) -> Dict[str, jax.Array]:
+    """Warmup scan, stat snapshot, measured scan, delta metrics.
+
+    Generic over the carry's leading axes: works for the per-policy step
+    ((S,)-shaped stats) and the stacked step ((P, S)-shaped stats) alike.
+    """
     carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup), unroll=unroll)
     st_w, _, dram_w = carry
     snap = {k: st_w[k] for k in _SNAP_KEYS}
@@ -83,6 +85,14 @@ def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
         "dl_met": d("dl_met"),
         "dl_missed": d("dl_missed"),
     }
+
+
+def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
+             unroll: int, pool: Dict[str, jax.Array], active: jax.Array
+             ) -> Dict[str, jax.Array]:
+    cfg, pol, carry = _init(cfg, policy)
+    step = policy_api.make_step(cfg, pol, pool, active)
+    return _scan_and_measure(step, carry, n_cycles, warmup, unroll)
 
 
 # Per-cycle scan unroll factor. >1 trades trace size (compile time) for
@@ -141,6 +151,124 @@ def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
     out = simulate_async(cfg, policy, pool_batch, active_batch, n_cycles,
                          warmup, unroll)
     return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# stacked cross-policy execution: the whole stackable CentralizedPolicy
+# family in ONE scan / ONE XLA program (see schedulers.make_stacked_step)
+# ---------------------------------------------------------------------------
+
+def stackable_names(cfg: SimConfig, policies=None) -> Tuple[str, ...]:
+    """The subset of `policies` (default: full registry) that opts into the
+    stacked execution path under this config."""
+    names = policy_api.names() if policies is None else policies
+    return tuple(n for n in names if policy_api.is_stackable(n, cfg))
+
+
+def _init_stacked(cfg: SimConfig, policies: Tuple[str, ...]):
+    """Resolve + validate the family and build the stacked (P, ...) carry."""
+    from repro.core import schedulers
+
+    pols = [policy_api.get(p) for p in policies]
+    bad = [p for p in policies if not policy_api.is_stackable(p, cfg)]
+    if bad:
+        raise ValueError(f"not stackable under this config: {bad}")
+    bufs = schedulers.stacked_union_state(cfg, pols)
+    stack = schedulers._stack_trees
+    P = len(pols)
+    carry = (stack([engine.source_state(cfg)] * P), stack(bufs),
+             stack([engine.dram_state(cfg)] * P))
+    return pols, carry
+
+
+def _one_sim_stacked(cfg: SimConfig, policies: Tuple[str, ...], n_cycles: int,
+                     warmup: int, unroll: int, pool: Dict[str, jax.Array],
+                     active: jax.Array) -> Dict[str, jax.Array]:
+    from repro.core import schedulers
+
+    pols, carry = _init_stacked(cfg, policies)
+    step = schedulers.make_stacked_step(cfg, pols, pool, active)
+    return _scan_and_measure(step, carry, n_cycles, warmup, unroll)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
+                   donate_argnums=(5, 6))
+def _sim_batch_stacked(cfg: SimConfig, policies: Tuple[str, ...],
+                       n_cycles: int, warmup: int, unroll: int,
+                       pool_batch, active_batch):
+    return jax.vmap(lambda p, a: _one_sim_stacked(cfg, policies, n_cycles,
+                                                  warmup, unroll, p, a)
+                    )(pool_batch, active_batch)
+
+
+def simulate_stacked_async(cfg: SimConfig, policies,
+                           pool_batch: Dict[str, np.ndarray],
+                           active_batch: np.ndarray, n_cycles: int = 20_000,
+                           warmup: int = 2_000,
+                           unroll: int = None) -> Dict[str, jax.Array]:
+    """One dispatch for the whole stacked family; (W, P, S) device arrays.
+
+    The per-policy trace+compile is amortized: the family shares a single
+    scan body and jits into one XLA program, vmapped over (policy, workload).
+    Same async-dispatch / buffer-copy contract as `simulate_async`.
+    """
+    pool_batch = {k: jnp.array(v, copy=True) for k, v in pool_batch.items()}
+    pool_batch = _fill_deadline_keys(pool_batch, np.asarray(
+        active_batch).shape)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _sim_batch_stacked(cfg, tuple(policies), n_cycles, warmup,
+                                  DEFAULT_UNROLL if unroll is None else unroll,
+                                  pool_batch, jnp.array(active_batch,
+                                                        copy=True))
+
+
+def simulate_stacked(cfg: SimConfig, policies,
+                     pool_batch: Dict[str, np.ndarray],
+                     active_batch: np.ndarray, n_cycles: int = 20_000,
+                     warmup: int = 2_000, unroll: int = None
+                     ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Per-policy (W, S) metrics for a stacked family, keyed by name.
+
+    Results are bit-identical to per-policy `simulate` calls (pinned by
+    tests/test_stacked_vmap.py against the golden digests).
+    """
+    out = simulate_stacked_async(cfg, policies, pool_batch, active_batch,
+                                 n_cycles, warmup, unroll)
+    host = {k: np.asarray(v) for k, v in out.items()}
+    return {pol: {k: v[:, i] for k, v in host.items()}
+            for i, pol in enumerate(policies)}
+
+
+def simulate_debug_stacked(cfg: SimConfig, policies,
+                           pool: Dict[str, np.ndarray], active: np.ndarray,
+                           n_cycles: int = 2_000):
+    """Stacked-path analog of `simulate_debug` (no workload vmap).
+
+    Returns {policy: (src_state, sched_state, dram_state)} numpy trees —
+    each policy's slice of the final stacked raw state, with the scheduler
+    state restricted to that policy's own (unpadded) keys.
+    """
+    from repro.core import schedulers
+
+    policies = tuple(policies)
+    pool = _fill_deadline_keys(
+        {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
+    pols, carry = _init_stacked(cfg, policies)
+    step = schedulers.make_stacked_step(cfg, pols, pool, jnp.asarray(active))
+
+    @jax.jit
+    def run(carry):
+        return jax.lax.scan(step, carry, jnp.arange(n_cycles))[0]
+
+    st_f, sched_f, dram_f = run(carry)
+    own = [set(p.init_state(cfg)) for p in pols]
+    take = lambda tree, i, keys=None: {
+        k: np.asarray(v[i]) for k, v in tree.items()
+        if keys is None or k in keys}
+    return {pol: (take(st_f, i), take(sched_f, i, own[i]), take(dram_f, i))
+            for i, pol in enumerate(policies)}
 
 
 def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],

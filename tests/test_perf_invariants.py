@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
@@ -50,28 +51,9 @@ def _dummy_pool(cfg):
     return pool
 
 
-def _sub_jaxprs(value):
-    try:                                  # jax >= 0.4.x new-style location
-        from jax.extend.core import ClosedJaxpr, Jaxpr
-    except ImportError:                   # older releases
-        from jax.core import ClosedJaxpr, Jaxpr
-    if isinstance(value, ClosedJaxpr):
-        return [value.jaxpr]
-    if isinstance(value, Jaxpr):
-        return [value]
-    if isinstance(value, (list, tuple)):
-        return [j for v in value for j in _sub_jaxprs(v)]
-    return []
-
-
-def _walk_prims(jaxpr, in_cond=False):
-    """Yield (primitive_name, inside_cond_branch) over all nested jaxprs."""
-    for eqn in jaxpr.eqns:
-        yield eqn.primitive.name, in_cond
-        child_in_cond = in_cond or eqn.primitive.name == "cond"
-        for v in eqn.params.values():
-            for sub in _sub_jaxprs(v):
-                yield from _walk_prims(sub, child_in_cond)
+# jaxpr-walking helpers live in repro.compat (the Jaxpr/ClosedJaxpr types
+# moved out of jax.core; compat resolves the right location per jax version)
+_walk_prims = compat.walk_primitives
 
 
 def _step_jaxpr(policy_name):
