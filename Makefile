@@ -14,8 +14,11 @@ deps-dev:
 test:
 	$(PY) -m pytest -x -q
 
+# SMOKE_OUT: optional path for a JSON run summary (CI uploads it as an
+# artifact), e.g. `make bench-smoke SMOKE_OUT=bench-smoke-summary.json`
 bench-smoke:
-	$(PY) -m benchmarks.simspeed --smoke
+	$(PY) -m benchmarks.simspeed --smoke \
+		$(if $(SMOKE_OUT),--summary-out $(SMOKE_OUT))
 
 bench-simspeed:
 	$(PY) -m benchmarks.simspeed

@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from benchmarks import common
+from repro.core import power
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
 
@@ -40,21 +41,29 @@ def main(n_cycles: int = 12_000, force: bool = False):
     cfg, pb = build()
     active = np.ones((1, cfg.n_src), bool)
     print("# SMS-DASH — frame deadlines (45 reqs / 1000 cycles) vs CPU cost")
-    print("policy,frames_met,frames_total,cpu_ipc,gpu_bw")
+    print("policy,frames_met,frames_total,cpu_ipc,gpu_bw,nj_per_req")
     results = {}
     for pol in POLICIES:
         m = sim.simulate(cfg, pol, pb, active, n_cycles, 2_000)
         met = int(m["dl_met"][0, 5])
         total = met + int(m["dl_missed"][0, 5])
         cpu = float(m["ipc"][0, :4].mean())
-        results[pol] = (met, total, cpu)
-        print(f"{pol},{met},{total},{cpu:.3f},{float(m['bw'][0, 4]):.3f}")
+        # full-MC energy per request: measured DRAM dynamic + background
+        # energy combined with this scheduler's structure leakage
+        e = power.full_mc_energy(
+            cfg, pol, float((m["energy_act"] + m["energy_rw"]).sum()),
+            float(m["energy_bg"].sum() + m["energy_wake"].sum()),
+            n_cycles, float(m["completed"].sum()))
+        results[pol] = (met, total, cpu, e["energy_per_request_nj"])
+        print(f"{pol},{met},{total},{cpu:.3f},{float(m['bw'][0, 4]):.3f},"
+              f"{e['energy_per_request_nj']:.2f}")
     us = (time.time() - t0) * 1e6 / len(POLICIES)
-    dash_met, total, dash_cpu = results["sms_dash"]
-    sms_met, _, sms_cpu = results["sms"]
+    dash_met, total, dash_cpu, dash_nj = results["sms_dash"]
+    sms_met, _, sms_cpu, sms_nj = results["sms"]
     common.emit("dash_deadline", us,
                 f"dash_met={dash_met}/{total};sms_met={sms_met}/{total};"
                 f"cpu_cost_pct={100 * (1 - dash_cpu / sms_cpu):.1f};"
+                f"nj_per_req=dash:{dash_nj:.1f}/sms:{sms_nj:.1f};"
                 f"paper_s7=sms_extends_to_deadline_scheduling")
     return results
 

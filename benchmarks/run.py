@@ -30,7 +30,7 @@ def main() -> None:
     cycles = 8_000 if args.quick else 16_000
     cycles_small = 6_000 if args.quick else 12_000
 
-    from benchmarks import (buffer_scaling, dash_deadline,
+    from benchmarks import (buffer_scaling, dash_deadline, fig_energy,
                             fig1_characteristics, fig4_perf_fairness,
                             fig5_cpu_gpu, fig6_core_scaling,
                             fig7_channel_scaling, p_sensitivity, power_area,
@@ -56,6 +56,8 @@ def main() -> None:
         ("buffer", lambda: buffer_scaling.main(n_small, cycles_small,
                                                args.force)),
         ("power", lambda: power_area.main(force=args.force)),
+        ("energy", lambda: fig_energy.main(2 if args.quick else 3,
+                                           cycles_small, args.force)),
         ("dash", lambda: dash_deadline.main(
             8_000 if args.quick else 12_000, args.force)),
     ]

@@ -138,11 +138,16 @@ def measure_stacked_family(n_per_cat: int, n_cycles: int, warmup: int
 
 
 def main(sweep_scale: Dict = None, policy_scale: Dict = None,
-         family_scale: Dict = None, write: bool = True) -> Dict:
+         family_scale: Dict = None, write: bool = True,
+         summary_out: str = None) -> Dict:
     sweep_scale = sweep_scale or SWEEP_SCALE
     policy_scale = policy_scale or POLICY_SCALE
     family_scale = family_scale or FAMILY_SCALE
     policies = list(sim.ALL_POLICIES)
+    # the energy subsystem rides the hot loop by default; the compile-count
+    # and trace-size gates below are only meaningful if they cover it
+    assert common.parity_config().energy_enabled, \
+        "bench gate must measure the energy-accounting hot loop"
 
     t0 = time.time()
     per_policy = measure_per_policy(policies, **policy_scale)
@@ -158,15 +163,6 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
     print(f"  sweep: {sweep['wall_s']}s -> {sweep['cycles_per_s']:,.0f} "
           f"cycle-workloads/s; xla_programs={sweep['xla_programs']}")
 
-    # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
-    # program through the sweep, and only the SMS-style protocols may fall
-    # back to per-policy compiles — catches accidental de-stacking.
-    n_fallback = len(policies) - sweep["n_stackable"]
-    assert sweep["xla_programs"]["stacked"] == 1, \
-        f"centralized family de-stacked: {sweep['xla_programs']}"
-    assert sweep["xla_programs"]["per_policy"] == n_fallback, \
-        f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
-
     current = {
         "meta": {
             "jax": jax.__version__,
@@ -180,6 +176,27 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         "stacked_family": family,
         "sweep": sweep,
     }
+    # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
+    # program through the sweep — with energy accounting enabled (asserted
+    # above) — and only the SMS-style protocols may fall back to per-policy
+    # compiles. Catches accidental de-stacking, including by energy state.
+    # The summary artifact is written BEFORE the asserts, with the measured
+    # gate outcomes, so a failed gate is diagnosable from the artifact.
+    n_fallback = len(policies) - sweep["n_stackable"]
+    gates = {
+        "energy_enabled": True,                    # asserted at entry
+        "stacked_one_program": sweep["xla_programs"]["stacked"] == 1,
+        "per_policy_fallbacks_ok":
+            sweep["xla_programs"]["per_policy"] == n_fallback,
+        "expected_fallbacks": n_fallback,
+    }
+    if summary_out:
+        Path(summary_out).write_text(json.dumps(
+            {"current": current, "gates": gates}, indent=1) + "\n")
+    assert gates["stacked_one_program"], \
+        f"centralized family de-stacked: {sweep['xla_programs']}"
+    assert gates["per_policy_fallbacks_ok"], \
+        f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
     data = {}
     if BENCH_PATH.exists():
         data = json.loads(BENCH_PATH.read_text())
@@ -212,6 +229,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny cycle counts, no BENCH file write — catches "
                     "trace-size/compile-time regressions in CI")
+    ap.add_argument("--summary-out", default=None,
+                    help="write a JSON run summary to this path (CI artifact)")
     args = ap.parse_args()
     if args.smoke:
         # family/sweep smoke scales must differ in static args, or the
@@ -219,6 +238,6 @@ if __name__ == "__main__":
         main(sweep_scale=dict(n_per_cat=1, n_cycles=300, warmup=100),
              policy_scale=dict(n_per_cat=1, n_cycles=200, warmup=50),
              family_scale=dict(n_per_cat=1, n_cycles=250, warmup=50),
-             write=False)
+             write=False, summary_out=args.summary_out)
     else:
-        main()
+        main(summary_out=args.summary_out)

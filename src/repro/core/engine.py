@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import energy
 from repro.core.params import SimConfig, SourcePool
 
 RING = 64
@@ -122,6 +123,8 @@ def dram_state(cfg: SimConfig) -> Dict[str, Any]:
         # measured service stats
         "hits": jnp.zeros((cfg.n_src,), jnp.int32),
         "issued": jnp.zeros((cfg.n_src,), jnp.int32),
+        # energy counters (empty dict when cfg.energy_enabled is off)
+        **energy.energy_state(cfg),
     }
 
 
@@ -288,6 +291,7 @@ def issue_channels(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any],
     dram["issued"] = accum_by_index(dram["issued"], src, 1, do_issue)
     st["sum_lat"] = accum_by_index(
         st["sum_lat"], src, (done - birth).astype(jnp.float32), do_issue)
+    dram = energy.on_issue(cfg, dram, do_issue, src, is_hit, done)
     return dram, st
 
 

@@ -38,6 +38,46 @@ def workload_metrics(cfg: SimConfig, wl: Workload, shared_perf: np.ndarray,
     }
 
 
+def energy_breakdown(cfg: SimConfig, m: Dict[str, np.ndarray],
+                     pool_batch: Dict[str, np.ndarray], n_cycles: int,
+                     static_per_cycle: float = 0.0) -> Dict[str, np.ndarray]:
+    """Per-workload (W,) energy metrics from `simulate` outputs (nJ).
+
+    m: metrics dict with the energy counters present (cfg.energy_enabled);
+    static_per_cycle: scheduler-structure leakage power in nJ/cycle (see
+    `power.scheduler_static_power`) folded into the full-MC totals.
+
+    EDP here is per-request energy-delay: (energy per request) x (cycles
+    per request) — runs are fixed-time, so per-request normalization is
+    what makes policies comparable.
+    """
+    is_gpu = np.asarray(pool_batch["is_gpu"], bool)            # (W, S)
+    act = np.asarray(m["energy_act"], np.float64)              # (W, S)
+    rw = np.asarray(m["energy_rw"], np.float64)
+    dyn = act + rw
+    bg = np.asarray(m["energy_bg"], np.float64) \
+        + np.asarray(m["energy_wake"], np.float64)             # (W,)
+    static = float(static_per_cycle) * n_cycles
+    total = dyn.sum(-1) + bg + static
+    reqs = np.maximum(np.asarray(m["completed"], np.float64).sum(-1), 1.0)
+    epr = total / reqs
+    return {
+        "energy_total": total,
+        "energy_per_request": epr,
+        "edp": epr * (n_cycles / reqs),
+        "energy_dyn_cpu": np.where(~is_gpu, dyn, 0.0).sum(-1),
+        "energy_dyn_gpu": np.where(is_gpu, dyn, 0.0).sum(-1),
+        "energy_act_cpu": np.where(~is_gpu, act, 0.0).sum(-1),
+        "energy_act_gpu": np.where(is_gpu, act, 0.0).sum(-1),
+        # row-miss ACT share of dynamic energy: the row-hit-batching signal
+        "act_energy_frac": act.sum(-1) / np.maximum(dyn.sum(-1), 1e-9),
+        "background_frac": bg / np.maximum(total, 1e-9),
+        "static_frac": static / np.maximum(total, 1e-9),
+        "pd_frac": np.asarray(m["pd_cycles"], np.float64)
+        / (cfg.n_channels * n_cycles),
+    }
+
+
 def aggregate(rows: Sequence[Dict[str, float]]) -> Dict[str, float]:
     keys = rows[0].keys()
     return {k: float(np.mean([r[k] for r in rows])) for k in keys}

@@ -84,6 +84,17 @@ class SimConfig:
     dash: bool = False
     dash_svc_est: float = 24.0       # estimated cycles per request (slack
                                      # calc; conservative => earlier urgency)
+    # DRAM energy accounting (repro.core.energy): per-command energies in
+    # nJ at DDR3-1600-class scale (Micron power-calc ballpark), background
+    # power per channel-cycle. Energy-only — never feeds back into timing
+    # or scheduling, so flipping `energy_enabled` cannot change decisions.
+    energy_enabled: bool = True
+    energy_act: float = 2.5          # ACT+PRE pair, charged per row miss
+    energy_rw: float = 1.2           # RD/WR burst, charged per issue
+    energy_standby: float = 0.10     # active-standby, per channel-cycle
+    energy_pd: float = 0.025         # power-down, per channel-cycle
+    energy_wake: float = 0.8         # power-down exit penalty, per wake
+    energy_pd_idle: int = 48         # all-banks-idle cycles before power-down
     timing: Timing = Timing()
 
     @property

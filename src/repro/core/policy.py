@@ -35,7 +35,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
 
-from repro.core import engine
+from repro.core import energy, engine
 from repro.core.params import SimConfig
 
 
@@ -168,6 +168,7 @@ def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
     def step(carry, t):
         st, sched, dram = carry
         st, dram = engine.completions_tick(st, dram, t)
+        dram = energy.background_tick(cfg, dram, t)
         st = engine.deadline_tick(cfg, pool, st, t)
         st = engine.source_tick(cfg, pool, st, active, t)
         st, sched = pol.tick(cfg, pool, st, sched, t)

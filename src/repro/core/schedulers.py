@@ -46,7 +46,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine
+from repro.core import energy, engine
 from repro.core.params import SimConfig
 
 AGE_CAP = (1 << 14) - 1
@@ -365,6 +365,7 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
         st, buf, dram = carry
         st, dram = vP(lambda s, d: engine.completions_tick(s, d, t)
                       )(st, dram)
+        dram = vP(lambda d: energy.background_tick(cfg, d, t))(dram)
         st = vP(lambda s: engine.deadline_tick(cfg, pool, s, t))(st)
         st = vP(lambda s: engine.source_tick(cfg, pool, s, active, t))(st)
         # admission: policy-ordered key per slice, one merged admit

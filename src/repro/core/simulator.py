@@ -26,6 +26,9 @@ from repro.core.params import SimConfig, SourcePool
 _SNAP_KEYS = ("insts_done", "emitted", "completed", "sum_lat", "dl_met",
               "dl_missed")
 _DRAM_SNAP = ("hits", "issued")
+# energy accumulators are delta-measured like the service stats; present in
+# dram_state only when cfg.energy_enabled (checked against the live tree)
+_ENERGY_SNAP = ("e_act", "e_rw", "e_bg", "e_wake", "pd_cycles")
 
 
 def __getattr__(name: str):
@@ -60,8 +63,11 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
     """
     carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup), unroll=unroll)
     st_w, _, dram_w = carry
+    energy_on = all(k in dram_w for k in _ENERGY_SNAP)
     snap = {k: st_w[k] for k in _SNAP_KEYS}
     snap.update({k: dram_w[k] for k in _DRAM_SNAP})
+    if energy_on:
+        snap.update({k: dram_w[k] for k in _ENERGY_SNAP})
     carry, _ = jax.lax.scan(step, carry,
                             jnp.arange(warmup, warmup + n_cycles),
                             unroll=unroll)
@@ -71,7 +77,7 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
     d = lambda k: (st_f[k] if k in st_f else dram_f[k]).astype(jnp.float32) \
         - snap[k].astype(jnp.float32)
     completed = d("completed")
-    return {
+    out = {
         "ipc": d("insts_done") / cyc,
         "bw": completed / cyc,                        # requests per cycle
         "mpkc": d("emitted") / cyc * 1000.0,
@@ -85,6 +91,17 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
         "dl_met": d("dl_met"),
         "dl_missed": d("dl_missed"),
     }
+    if energy_on:
+        # per-source dynamic energy stays (S,)-shaped for the CPU/GPU class
+        # breakdown; per-channel background collapses to totals
+        out.update({
+            "energy_act": d("e_act"),                 # (S,) ACT/PRE, nJ
+            "energy_rw": d("e_rw"),                   # (S,) RD/WR bursts
+            "energy_bg": jnp.sum(d("e_bg"), -1),      # standby + power-down
+            "energy_wake": jnp.sum(d("e_wake"), -1),
+            "pd_cycles": jnp.sum(d("pd_cycles"), -1),
+        })
+    return out
 
 
 def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,

@@ -1,0 +1,138 @@
+"""Unit tests for `repro.compat` — the one-file jax version shim.
+
+These exist so the next jax bump fails HERE, loudly and attributably,
+instead of deep inside `moe.py`/`distributed.pipeline` at trace time:
+shard_map resolution + check-kwarg translation, tree_map, the jaxpr
+walkers the perf-invariant tests build on, and jit cache introspection.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compat
+
+
+# ---------------------------------------------------------------------------
+# shard_map: resolution + kwarg translation
+# ---------------------------------------------------------------------------
+
+def test_resolve_shard_map_finds_an_impl():
+    impl, kw = compat._resolve_shard_map()
+    assert callable(impl)
+    assert kw in (None, "check_rep", "check_vma"), kw
+    # the module-level binding matches a fresh resolution
+    assert compat._CHECK_KW == kw
+
+
+@pytest.mark.parametrize("native_kw", ["check_rep", "check_vma"])
+def test_shard_map_translates_check_kwarg(monkeypatch, native_kw):
+    """Callers always pass the modern `check_vma`; the shim must hand the
+    pinned implementation whatever spelling it natively accepts."""
+    seen = {}
+
+    def fake_impl(f, mesh, in_specs, out_specs, **kw):
+        seen.update(kw, mesh=mesh)
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_SHARD_MAP_IMPL", fake_impl)
+    monkeypatch.setattr(compat, "_CHECK_KW", native_kw)
+    out = compat.shard_map(lambda x: x, mesh="MESH", in_specs=(),
+                           out_specs=(), check_vma=False)
+    assert out == "mapped"
+    assert seen[native_kw] is False and seen["mesh"] == "MESH"
+    assert ("check_vma" in seen) == (native_kw == "check_vma")
+
+
+def test_shard_map_no_check_kwarg_supported(monkeypatch):
+    """An impl with no replication-check kwarg gets none injected."""
+    seen = {}
+
+    def fake_impl(f, mesh, in_specs, out_specs, **kw):
+        seen.update(kw)
+        return "mapped"
+
+    monkeypatch.setattr(compat, "_SHARD_MAP_IMPL", fake_impl)
+    monkeypatch.setattr(compat, "_CHECK_KW", None)
+    compat.shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                     check_vma=True)
+    assert "check_vma" not in seen and "check_rep" not in seen
+
+
+def test_shard_map_explicit_native_kwarg_wins(monkeypatch):
+    """A caller passing the native kwarg directly is not second-guessed."""
+    seen = {}
+
+    def fake_impl(f, mesh, in_specs, out_specs, **kw):
+        seen.update(kw)
+
+    monkeypatch.setattr(compat, "_SHARD_MAP_IMPL", fake_impl)
+    monkeypatch.setattr(compat, "_CHECK_KW", "check_rep")
+    compat.shard_map(lambda x: x, mesh=None, in_specs=(), out_specs=(),
+                     check_vma=True, check_rep=False)
+    assert seen["check_rep"] is False
+
+
+# ---------------------------------------------------------------------------
+# tree_map
+# ---------------------------------------------------------------------------
+
+def test_tree_map_is_usable_and_non_deprecated_path():
+    out = compat.tree_map(lambda a, b: a + b, {"x": 1, "y": (2, 3)},
+                          {"x": 10, "y": (20, 30)})
+    assert out == {"x": 11, "y": (22, 33)}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walkers (what test_perf_invariants / test_stacked_vmap build on)
+# ---------------------------------------------------------------------------
+
+def _cond_sort_fn(x):
+    y = jnp.sort(x)                                  # unconditional sort
+    return jax.lax.cond(y[0] > 0.0,
+                        lambda v: jnp.sort(-v),      # sort inside cond
+                        lambda v: v, y)
+
+
+def test_walk_primitives_distinguishes_cond_branches():
+    jx = jax.make_jaxpr(_cond_sort_fn)(jnp.arange(4.0))
+    prims = list(compat.walk_primitives(jx.jaxpr))
+    assert ("sort", False) in prims, "missed the unconditional sort"
+    assert ("sort", True) in prims, "missed the cond-gated sort"
+    # nesting flag is sticky: everything under the cond is flagged
+    assert all(in_cond for p, in_cond in prims if p == "sort" and in_cond)
+
+
+def test_walk_primitives_descends_into_scan_bodies():
+    def scanned(x):
+        return jax.lax.scan(lambda c, _: (jnp.sort(c), None), x,
+                            jnp.arange(3))[0]
+    jx = jax.make_jaxpr(scanned)(jnp.arange(4.0))
+    assert ("sort", False) in compat.walk_primitives(jx.jaxpr)
+
+
+def test_sub_jaxprs_unwraps_closed_lists_and_ignores_scalars():
+    jx = jax.make_jaxpr(_cond_sort_fn)(jnp.arange(4.0))
+    cond_eqn = next(e for e in jx.jaxpr.eqns if e.primitive.name == "cond")
+    branches = cond_eqn.params["branches"]
+    subs = compat.sub_jaxprs(branches)
+    assert len(subs) == 2 and all(isinstance(j, compat.Jaxpr) for j in subs)
+    assert compat.sub_jaxprs(jx) == [jx.jaxpr]   # ClosedJaxpr unwraps
+    assert compat.sub_jaxprs(3) == []
+    assert compat.sub_jaxprs([jx.jaxpr, (branches[0],)]) \
+        == [jx.jaxpr, branches[0].jaxpr]
+
+
+# ---------------------------------------------------------------------------
+# jit cache introspection (bench-smoke's one-XLA-program gate)
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_size_counts_distinct_programs():
+    @jax.jit
+    def g(x):
+        return x * 2
+
+    base = compat.jit_cache_size(g)
+    g(jnp.zeros((2,)))
+    g(jnp.zeros((3,)))                           # new shape -> new program
+    g(jnp.zeros((3,)))                           # cache hit -> no new program
+    assert compat.jit_cache_size(g) - base == 2

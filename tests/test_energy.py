@@ -1,0 +1,159 @@
+"""DRAM energy subsystem (`repro.core.energy`): accounting identities,
+power-down state machine, strict additivity, and the metrics/power surface.
+
+The contract under test:
+
+  * command energy is exact: e_rw = energy_rw * issued per source, e_act =
+    energy_act * (issued - hits); background = standby/power-down split by
+    pd_cycles — no drift, no double-charging;
+  * the power-down machine engages on genuinely idle channels (and pays a
+    wake-up on the next command), but stays out of the way under load;
+  * the subsystem is PURELY additive: disabling it changes no scheduling
+    metric, and enabling it adds only the energy keys (the golden-digest
+    tests cover bit-identity; here we cover the metric surface both ways);
+  * energy flows unchanged through the stacked cross-policy path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import energy, engine
+from repro.core import metrics as met
+from repro.core import power
+from repro.core import simulator as sim
+from repro.core.params import SimConfig
+
+CFG = SimConfig(n_cpu=3, n_channels=2, buf_entries=24, fifo_size=5,
+                dcs_size=3)
+N_CYCLES = 3_000
+
+
+def _pool(rng: np.random.RandomState, cfg: SimConfig):
+    S = cfg.n_src
+    mpki = rng.uniform(2, 40, S).astype(np.float32)
+    return {
+        "mpki": mpki,
+        "inst_per_miss": np.maximum(1000.0 / mpki, 1.0).astype(np.float32),
+        "rbl": rng.uniform(0.1, 0.95, S).astype(np.float32),
+        "blp": rng.randint(1, 7, S).astype(np.int32),
+        "is_gpu": np.asarray([False] * cfg.n_cpu + [True]),
+    }
+
+
+@pytest.mark.parametrize("policy", ["frfcfs", "atlas", "sms"])
+def test_command_energy_identities(policy):
+    """Raw counters satisfy the per-command accounting identities exactly."""
+    pool = _pool(np.random.RandomState(0), CFG)
+    _, _, dram_f = sim.simulate_debug(CFG, policy, pool,
+                                      np.ones(CFG.n_src, bool), N_CYCLES)
+    issued = dram_f["issued"].astype(np.float64)
+    hits = dram_f["hits"].astype(np.float64)
+    # f32 accumulation of a non-dyadic increment rounds each add: tolerance
+    # covers ~N ulps over thousands of accumulated commands
+    np.testing.assert_allclose(dram_f["e_rw"], CFG.energy_rw * issued,
+                               rtol=1e-4)
+    np.testing.assert_allclose(dram_f["e_act"],
+                               CFG.energy_act * (issued - hits), rtol=1e-4)
+    pd = float(dram_f["pd_cycles"].sum())
+    expect_bg = CFG.energy_pd * pd + \
+        CFG.energy_standby * (CFG.n_channels * N_CYCLES - pd)
+    np.testing.assert_allclose(float(dram_f["e_bg"].sum()), expect_bg,
+                               rtol=1e-4)
+    assert (dram_f["e_wake"] >= 0).all()
+    assert issued.sum() > 0, "vacuous run: nothing issued"
+
+
+def test_power_down_engages_on_idle_and_stays_out_under_load():
+    cfg = CFG
+    pool = _pool(np.random.RandomState(1), cfg)
+    # one sparse CPU source alone: long all-banks-idle stretches between
+    # misses -> power-down cycles and wake-up penalties accrue
+    pool["mpki"][:] = 2.0
+    pool["inst_per_miss"][:] = 500.0
+    lone = np.zeros(cfg.n_src, bool)
+    lone[0] = True
+    _, _, dram_idle = sim.simulate_debug(cfg, "frfcfs", pool, lone, N_CYCLES)
+    pd_frac = dram_idle["pd_cycles"].sum() / (cfg.n_channels * N_CYCLES)
+    assert pd_frac > 0.5, f"idle system never powered down: {pd_frac:.2f}"
+    assert dram_idle["e_wake"].sum() > 0, "woke without paying the penalty"
+    # full mix incl. the streaming GPU: channels stay busy
+    busy_pool = _pool(np.random.RandomState(2), cfg)
+    _, _, dram_busy = sim.simulate_debug(cfg, "frfcfs", busy_pool,
+                                         np.ones(cfg.n_src, bool), N_CYCLES)
+    busy_frac = dram_busy["pd_cycles"].sum() / (cfg.n_channels * N_CYCLES)
+    assert busy_frac < 0.05, f"loaded system powered down: {busy_frac:.2f}"
+    assert (dram_busy["e_bg"].sum() > dram_idle["e_bg"].sum()), \
+        "standby must cost more than power-down"
+
+
+@pytest.mark.parametrize("policy", ["frfcfs", "sms"])
+def test_energy_is_purely_additive_to_metrics(policy):
+    """Flipping energy_enabled changes no scheduling metric, only adds the
+    energy outputs (simulate path; golden digests pin the raw-state side)."""
+    rng = np.random.RandomState(3)
+    W, S = 2, CFG.n_src
+    pool = {k: np.stack([v, v]) for k, v in _pool(rng, CFG).items()}
+    active = np.ones((W, S), bool)
+    on = sim.simulate(CFG, policy, pool, active, 1_000, 200)
+    off = sim.simulate(CFG.replace(energy_enabled=False), policy, pool,
+                       active, 1_000, 200)
+    energy_keys = {"energy_act", "energy_rw", "energy_bg", "energy_wake",
+                   "pd_cycles"}
+    assert set(on) - set(off) == energy_keys
+    for k in off:
+        np.testing.assert_array_equal(on[k], off[k], err_msg=k)
+    assert sum(float(np.sum(on[k])) for k in energy_keys) > 0
+
+
+def test_disabled_mode_leaves_no_trace():
+    cfg = CFG.replace(energy_enabled=False)
+    assert energy.energy_state(cfg) == {}
+    assert not set(energy.STATE_KEYS) & set(engine.dram_state(cfg))
+
+
+def test_energy_flows_through_stacked_path():
+    """Stacked slices carry the counters bit-identically to standalone."""
+    rng = np.random.RandomState(4)
+    W, S = 2, CFG.n_src
+    pool = {k: np.stack([v, v]) for k, v in _pool(rng, CFG).items()}
+    active = np.ones((W, S), bool)
+    fam = sim.stackable_names(CFG)[:3]
+    stk = sim.simulate_stacked(CFG, fam, pool, active, 500, 100)
+    for pol in fam:
+        ref = sim.simulate(CFG, pol, pool, active, 500, 100)
+        for k in ("energy_act", "energy_rw", "energy_bg", "energy_wake",
+                  "pd_cycles"):
+            np.testing.assert_array_equal(ref[k], stk[pol][k],
+                                          err_msg=f"{pol}:{k}")
+
+
+def test_energy_breakdown_and_full_mc_combine():
+    rng = np.random.RandomState(5)
+    W, S = 2, CFG.n_src
+    pool = {k: np.stack([v, v]) for k, v in _pool(rng, CFG).items()}
+    active = np.ones((W, S), bool)
+    n_cycles = 1_500
+    m = sim.simulate(CFG, "frfcfs", pool, active, n_cycles, 200)
+    spc = power.scheduler_static_power(CFG, "frfcfs")
+    assert spc > 0
+    br = met.energy_breakdown(CFG, m, pool, n_cycles, static_per_cycle=spc)
+    for k, v in br.items():
+        assert np.asarray(v).shape == (W,), k
+        assert np.isfinite(v).all(), k
+    dyn = (m["energy_act"] + m["energy_rw"]).sum(-1)
+    np.testing.assert_allclose(
+        br["energy_total"],
+        dyn + m["energy_bg"] + m["energy_wake"] + spc * n_cycles, rtol=1e-6)
+    np.testing.assert_allclose(
+        br["energy_dyn_cpu"] + br["energy_dyn_gpu"], dyn, rtol=1e-6)
+    reqs = m["completed"].sum(-1)
+    np.testing.assert_allclose(
+        br["edp"], br["energy_per_request"] * n_cycles / reqs, rtol=1e-6)
+    assert ((br["act_energy_frac"] > 0) & (br["act_energy_frac"] < 1)).all()
+    # the full-MC combine agrees with the breakdown's per-request figure
+    fm = power.full_mc_energy(CFG, "frfcfs", float(dyn[0]),
+                              float(m["energy_bg"][0] + m["energy_wake"][0]),
+                              n_cycles, float(reqs[0]))
+    np.testing.assert_allclose(fm["energy_per_request_nj"],
+                               br["energy_per_request"][0], rtol=1e-6)
+    # SMS's FIFO-only structures must undercut the CAM scheduler's leakage
+    assert power.scheduler_static_power(CFG, "sms") < spc

@@ -24,6 +24,7 @@ import numpy as np
 import pytest
 
 from repro import compat
+from repro.core import energy
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
@@ -56,8 +57,8 @@ def _dummy_pool(cfg):
 _walk_prims = compat.walk_primitives
 
 
-def _step_jaxpr(policy_name):
-    cfg, pol, carry = sim._init(CFG, policy_name)
+def _step_jaxpr(policy_name, base_cfg=CFG):
+    cfg, pol, carry = sim._init(base_cfg, policy_name)
     pool = _dummy_pool(cfg)
     active = jnp.ones((cfg.n_src,), bool)
     step = policy_api.make_step(cfg, pol, pool, active)
@@ -82,6 +83,29 @@ def test_ranked_policies_sort_inside_cond(policy_name):
     gated = [p for p, in_cond in _walk_prims(jx.jaxpr)
              if p in SORT_PRIMS and in_cond]
     assert gated, f"{policy_name}: expected ranking sorts inside cond"
+
+
+def test_energy_accounting_adds_no_sorts_or_scatters():
+    """repro.core.energy rides the per-cycle hot loop: enabling it must add
+    zero sort/scatter/gather primitives to the step jaxpr (hot-loop rules
+    1 + 3 — the counters are elementwise/one-hot-masked updates only)."""
+    assert CFG.energy_enabled
+
+    def counts(jx):
+        out = {}
+        for p, _ in _walk_prims(jx.jaxpr):
+            fam = next((f for f in ("sort", "scatter", "gather")
+                        if p.startswith(f)), None)
+            if fam:
+                out[fam] = out.get(fam, 0) + 1
+        return out
+
+    off_cfg = CFG.replace(energy_enabled=False)
+    for name in ("frfcfs", "atlas", "sms"):
+        on, off = counts(_step_jaxpr(name)), counts(_step_jaxpr(name, off_cfg))
+        assert on == off, (
+            f"{name}: energy accounting changed sort/scatter/gather "
+            f"population: {off} -> {on}")
 
 
 def test_scan_carry_has_no_pool_or_active():
@@ -137,13 +161,20 @@ def _digest(tree):
 
 @pytest.mark.parametrize("policy_name", ["atlas", "parbs", "tcm"])
 def test_cond_refactor_bit_identical(policy_name):
+    # runs with the energy subsystem ON (CFG default): the goldens predate
+    # it, so matching them on every non-energy key proves energy accounting
+    # is purely additive to the scheduling decisions
     st_f, sched_f, dram_f = sim.simulate_debug(
         CFG, policy_name, _golden_pool(CFG), np.ones(CFG.n_src, bool),
         n_cycles=1_500)
     g = GOLDEN[policy_name]
     for part, tree in (("src", st_f), ("dram", dram_f)):
         new = _digest(tree)
-        assert new == g[part], f"{policy_name} {part} diverged"
+        extra = set(new) - set(g[part])
+        assert extra <= set(energy.STATE_KEYS), \
+            f"{policy_name} {part} grew non-energy keys: {extra}"
+        for k, h in g[part].items():
+            assert new[k] == h, f"{policy_name} {part}[{k}] diverged"
     sched = _digest(sched_f)
     for k in set(sched) & set(g["sched"]):
         assert sched[k] == g["sched"][k], f"{policy_name} sched[{k}] diverged"
