@@ -6,7 +6,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed
+.PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed bench-qos
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -22,6 +22,11 @@ bench-smoke:
 
 bench-simspeed:
 	$(PY) -m benchmarks.simspeed
+
+# 3-class (CPU+GPU+HWA) QoS family: per-class deadline-met rate, tail
+# latency, and class-masked fairness across every registry policy
+bench-qos:
+	$(PY) -m benchmarks.run --only qos
 
 ci: deps-dev test
 

@@ -186,6 +186,12 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         perf = sim.perf_vector(cfg, m, pool)
         rows = [met.workload_metrics(cfg, w, perf[i], alone)
                 for i, w in enumerate(workloads)]
+        if "lat_hist" in m:
+            # per-class QoS columns (tail latency, deadline-met rate) join
+            # the speedup/fairness rows, so agg/by_category cover them too
+            qb = met.qos_breakdown(cfg, m, pool)
+            for i, r in enumerate(rows):
+                r.update({k: float(v[i]) for k, v in qb.items()})
         out = {
             "policy": pol,
             "elapsed_s": round(time.time() - t0, 1),

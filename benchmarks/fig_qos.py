@@ -1,0 +1,75 @@
+"""QoS benchmark family: CPU+GPU+HWA mixes with frame deadlines.
+
+The N-class growth of `benchmarks/dash_deadline.py` (ROADMAP open item 3):
+every registry policy runs a 3-class workload sweep — `n_hwa` SQUASH-style
+frame-deadline accelerators (`workloads.HWA_BENCH`) next to the CPU cores
+and the GPU — through the stacked `run_sweep` path, and is scored on the
+QoS surface the 2-class benchmarks can't see:
+
+  * `dl_met_rate` — frame-deadline-met rate for the HWA class (frames met
+    over frames released in the measurement window);
+  * `lat_p95_*` / `lat_p99_*` — per-class tail request latency (cycles),
+    reduced from the issue-time latency histogram (`repro.core.qos`);
+  * `cpu_max_slowdown` / `hwa_max_slowdown` — deadline-aware fairness: the
+    shared max-slowdown reduction masked per class;
+  * `urgent_admits` — how often `squash_prio`'s urgent tier jumped the
+    admission queue (zero for policies without an urgent tier).
+
+Output convention: ``fig_qos,us_per_call,derived`` CSV row after the table.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import metrics as met
+from repro.core import workloads as wl
+from repro.core.params import CLS_HWA, SimConfig
+
+
+def qos_config(n_cpu: int = 4, n_hwa: int = 2,
+               n_channels: int = 2) -> SimConfig:
+    """3-class parity config: fewer cores than the 2-class sweeps so the
+    HWA frame bursts actually contend with the CPU/GPU streams."""
+    return common.parity_config(n_cpu=n_cpu, n_channels=n_channels,
+                                n_hwa=n_hwa)
+
+
+COLUMNS = ("dl_met_rate", "lat_p99_cpu", "lat_p99_hwa", "cpu_max_slowdown",
+           "hwa_max_slowdown", "weighted_speedup")
+
+
+def main(n_per_cat: int = 4, n_cycles: int = 12_000,
+         force: bool = False) -> dict:
+    t0 = time.time()
+    cfg = qos_config()
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat, seed=13,
+                            n_hwa=cfg.n_hwa)
+    policies = list(common.POLICIES)
+    results = common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
+                               tag="qos", force=force)
+
+    hwa = met.class_vector(cfg) == CLS_HWA
+    print("policy," + ",".join(COLUMNS) + ",urgent_admits")
+    urgents = {}
+    for pol, res in results.items():
+        ua = float(np.asarray(res["measured"].get(
+            "urgent_admits", np.zeros(cfg.n_src)))[hwa].sum())
+        urgents[pol] = ua
+        vals = [res["agg"][c] for c in COLUMNS]
+        print(pol + "," + ",".join(f"{v:.3f}" for v in vals) + f",{ua:.0f}")
+
+    best = max(results, key=lambda p: results[p]["agg"]["dl_met_rate"])
+    us = (time.time() - t0) * 1e6 / max(len(policies), 1)
+    common.emit(
+        "fig_qos", us,
+        f"best_met={best}:{results[best]['agg']['dl_met_rate']:.3f};"
+        f"squash_urgent_admits={urgents.get('squash_prio', 0):.0f};"
+        f"n_hwa={cfg.n_hwa}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

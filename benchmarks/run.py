@@ -3,6 +3,14 @@ benches (roofline report, kernels, serving). Prints ``name,us_per_call,
 derived`` CSV rows; detailed tables go to stdout above each row.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--force]
+       PYTHONPATH=src python -m benchmarks.run --only qos   # QoS family
+
+The ``qos`` entry (benchmarks/fig_qos.py, also `make bench-qos`) sweeps
+3-class CPU+GPU+HWA mixes and reports per-class QoS: frame-deadline-met
+rate (`dl_met_rate`), per-class p95/p99 request latency from the issue-time
+latency histogram (`lat_p99_cpu`, `lat_p99_hwa`, ...), class-masked max
+slowdown (`cpu_max_slowdown`, `hwa_max_slowdown`), and `squash_prio`'s
+urgent-tier admission count.
 """
 from __future__ import annotations
 
@@ -31,10 +39,10 @@ def main() -> None:
     cycles_small = 6_000 if args.quick else 12_000
 
     from benchmarks import (buffer_scaling, dash_deadline, fig_energy,
-                            fig1_characteristics, fig4_perf_fairness,
-                            fig5_cpu_gpu, fig6_core_scaling,
-                            fig7_channel_scaling, p_sensitivity, power_area,
-                            simspeed)
+                            fig_qos, fig1_characteristics,
+                            fig4_perf_fairness, fig5_cpu_gpu,
+                            fig6_core_scaling, fig7_channel_scaling,
+                            p_sensitivity, power_area, simspeed)
 
     benches = [
         # quick mode measures at reduced scale and must not overwrite the
@@ -60,6 +68,9 @@ def main() -> None:
                                            cycles_small, args.force)),
         ("dash", lambda: dash_deadline.main(
             8_000 if args.quick else 12_000, args.force)),
+        ("qos", lambda: fig_qos.main(3 if args.quick else 4,
+                                     8_000 if args.quick else 12_000,
+                                     args.force)),
     ]
 
     # framework benches (present once their modules are built)

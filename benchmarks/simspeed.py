@@ -119,6 +119,23 @@ def measure_sweep(policies: Sequence[str], n_per_cat: int, n_cycles: int,
     }
 
 
+def measure_nclass_smoke(n_cycles: int = 240, warmup: int = 60) -> Dict:
+    """3-class mix (CPU+GPU+HWA): the stackable family must still compile
+    as ONE XLA program with class ids + deadline streams in the pool.
+    Tiny fixed scale — this is a compile-count gate, not a throughput
+    measurement (the distinct config keeps its jit cache entry separate
+    from the 2-class scales)."""
+    cfg = common.parity_config(n_cpu=4, n_hwa=2)
+    fam = sim.stackable_names(cfg)
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=1, n_hwa=cfg.n_hwa)
+    pool, active = wl.pool_batch(cfg, wls)
+    before = compat.jit_cache_size(sim._sim_batch_stacked)
+    sim.simulate_stacked(cfg, fam, pool, active, n_cycles, warmup)
+    after = compat.jit_cache_size(sim._sim_batch_stacked)
+    return {"policies": list(fam), "n_hwa": cfg.n_hwa,
+            "xla_programs": after - before}
+
+
 def measure_stacked_family(n_per_cat: int, n_cycles: int, warmup: int
                            ) -> Dict:
     """Cold-sweep wall-clock for the stackable CentralizedPolicy family,
@@ -162,6 +179,9 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
     sweep = measure_sweep(policies, **sweep_scale)
     print(f"  sweep: {sweep['wall_s']}s -> {sweep['cycles_per_s']:,.0f} "
           f"cycle-workloads/s; xla_programs={sweep['xla_programs']}")
+    nclass = measure_nclass_smoke()
+    print(f"  3-class smoke ({len(nclass['policies'])} policies, "
+          f"{nclass['n_hwa']} HWAs): xla_programs={nclass['xla_programs']}")
 
     current = {
         "meta": {
@@ -175,6 +195,7 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         "per_policy": per_policy,
         "stacked_family": family,
         "sweep": sweep,
+        "nclass_smoke": nclass,
     }
     # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
     # program through the sweep — with energy accounting enabled (asserted
@@ -189,6 +210,7 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         "per_policy_fallbacks_ok":
             sweep["xla_programs"]["per_policy"] == n_fallback,
         "expected_fallbacks": n_fallback,
+        "nclass_one_program": nclass["xla_programs"] == 1,
     }
     if summary_out:
         Path(summary_out).write_text(json.dumps(
@@ -197,6 +219,8 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         f"centralized family de-stacked: {sweep['xla_programs']}"
     assert gates["per_policy_fallbacks_ok"], \
         f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
+    assert gates["nclass_one_program"], \
+        f"3-class mix de-stacked the family: {nclass['xla_programs']} programs"
     data = {}
     if BENCH_PATH.exists():
         data = json.loads(BENCH_PATH.read_text())

@@ -15,11 +15,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy
-from repro.core.params import SimConfig, SourcePool
+from repro.core import energy, qos
+from repro.core.params import (CLS_CPU, CLS_GPU, CLS_HWA, SimConfig,
+                               SourcePool)
 
 RING = 64
 NEG_T = -100_000
+
+# source_state keys added by the N-class requester model (golden digests
+# predate them; the digest tests whitelist exactly this tuple)
+NCLASS_SRC_KEYS = ("frames_released",)
 
 
 @functools.lru_cache(maxsize=None)
@@ -106,8 +111,9 @@ def source_state(cfg: SimConfig) -> Dict[str, Any]:
                 + jnp.uint32(12345)),
         # measurement helpers (Fig 1): bank occupancy snapshots
         "blp_sum": z_f, "blp_n": z_f,
-        # SMS-DASH deadline accounting
+        # frame-deadline accounting (HWA class / SMS-DASH)
         "period_done": z_i, "dl_met": z_i, "dl_missed": z_i,
+        "frames_released": z_i,
     }
 
 
@@ -125,14 +131,27 @@ def dram_state(cfg: SimConfig) -> Dict[str, Any]:
         "issued": jnp.zeros((cfg.n_src,), jnp.int32),
         # energy counters (empty dict when cfg.energy_enabled is off)
         **energy.energy_state(cfg),
+        # QoS latency histogram (empty dict when cfg.qos_enabled is off)
+        **qos.qos_state(cfg),
     }
+
+
+def derive_src_class(is_gpu: jax.Array, dl_period: jax.Array) -> jax.Array:
+    """Class ids for legacy pools that predate `src_class`: the GPU flag
+    wins, a deadline stream marks an HWA, everything else is a CPU core.
+    This reproduces the old `is_gpu` / `dl_period > 0` partition exactly,
+    so derived classes keep 2-class pools bit-identical."""
+    return jnp.where(jnp.asarray(is_gpu, bool), CLS_GPU,
+                     jnp.where(jnp.asarray(dl_period) > 0, CLS_HWA,
+                               CLS_CPU)).astype(jnp.int32)
 
 
 def pool_arrays(pool: SourcePool) -> Dict[str, jax.Array]:
     S = len(pool.mpki)
     dlp = pool.dl_period if pool.dl_period is not None else np.zeros(S)
     dlr = pool.dl_reqs if pool.dl_reqs is not None else np.zeros(S)
-    return {
+    dlj = pool.dl_jitter if pool.dl_jitter is not None else np.zeros(S)
+    out = {
         "mpki": jnp.asarray(pool.mpki, jnp.float32),
         "inst_per_miss": jnp.asarray(pool.inst_per_miss(), jnp.float32),
         "rbl": jnp.asarray(pool.rbl, jnp.float32),
@@ -140,12 +159,33 @@ def pool_arrays(pool: SourcePool) -> Dict[str, jax.Array]:
         "is_gpu": jnp.asarray(pool.is_gpu, bool),
         "dl_period": jnp.asarray(dlp, jnp.int32),
         "dl_reqs": jnp.asarray(dlr, jnp.int32),
+        "dl_jitter": jnp.asarray(dlj, jnp.int32),
     }
+    out["src_class"] = (jnp.asarray(pool.src_class, jnp.int32)
+                        if pool.src_class is not None else
+                        derive_src_class(out["is_gpu"], out["dl_period"]))
+    return out
 
 
 # ---------------------------------------------------------------------------
 # per-cycle: core progress + request generation into the pending register
 # ---------------------------------------------------------------------------
+
+def frame_release_offset(S: int, frame: jax.Array, dl_jitter: jax.Array
+                         ) -> jax.Array:
+    """Per-(source, frame) release jitter in [0, dl_jitter] cycles.
+
+    Stateless integer hash of the source id and frame index (LCG-style
+    mixing), NOT a draw from the source `rng` stream — consuming that
+    stream would shift every downstream address draw and break the
+    2-class bit-identity contract. Zero jitter hashes to offset 0.
+    """
+    mix = (jnp.arange(S, dtype=jnp.uint32) * jnp.uint32(2654435761)) ^ \
+        (frame.astype(jnp.uint32) * jnp.uint32(2246822519))
+    h = mix * jnp.uint32(1664525) + jnp.uint32(1013904223)
+    span = jnp.asarray(dl_jitter).astype(jnp.uint32) + jnp.uint32(1)
+    return ((h >> jnp.uint32(8)) % span).astype(jnp.int32)
+
 
 def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
                 st: Dict[str, Any], active: jax.Array, t: jax.Array
@@ -154,13 +194,21 @@ def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
 
     active: (S,) bool — which sources exist in this workload (masking lets a
     single jitted sim serve every workload mix and the alone-runs).
+
+    The traffic generator is picked by `pool["src_class"]`: CPU cores are
+    MLP-limit cores (instruction progress between misses), the GPU is an
+    always-wanting streaming generator, HWAs emit periodic frame bursts —
+    each frame releases up to `dl_reqs` requests after a per-frame jitter
+    offset, due at the next `dl_period` boundary (`deadline_tick`).
     """
     S = cfg.n_src
-    is_gpu = pool["is_gpu"]
-    is_accel = pool["dl_period"] > 0          # real-time accelerator (DASH)
-    is_cpu = ~is_gpu & ~is_accel
-    # accelerators are DMA-like streaming engines: deep request queues
-    mshr = jnp.where(is_gpu | is_accel, cfg.gpu_mshr, cfg.cpu_mshr)
+    cls = pool["src_class"]
+    is_gpu = cls == CLS_GPU
+    is_hwa = cls == CLS_HWA
+    is_cpu = cls == CLS_CPU
+    # GPU/HWA are DMA-like streaming engines: deep request queues
+    mshr = jnp.where(is_gpu, cfg.gpu_mshr,
+                     jnp.where(is_hwa, cfg.hwa_mshr, cfg.cpu_mshr))
     room = st["outstanding"] < mshr
     # CPU: progress instructions while not blocked on a full window and not
     # waiting for MC admission
@@ -172,8 +220,13 @@ def source_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
     want_cpu = active & is_cpu & (st["insts_acc"] >= pool["inst_per_miss"]) \
         & ~st["pend_valid"] & room
     want_gpu = active & is_gpu & ~st["pend_valid"] & room
-    # accelerator: emit only this frame's remaining demand
-    want_accel = active & is_accel & ~st["pend_valid"] & room & \
+    # HWA: emit only this frame's remaining demand, once the frame's
+    # jittered release point has passed (offset 0 when dl_jitter is 0,
+    # which keeps legacy deadline sources bit-identical)
+    period = jnp.maximum(pool["dl_period"], 1)
+    released = jnp.mod(t, period) >= \
+        frame_release_offset(S, t // period, pool["dl_jitter"])
+    want_accel = active & is_hwa & ~st["pend_valid"] & room & released & \
         (st["period_done"] + st["outstanding"] < pool["dl_reqs"])
     want = want_cpu | want_gpu | want_accel
 
@@ -220,12 +273,18 @@ def completions_tick(st: Dict[str, Any], dram: Dict[str, Any], t: jax.Array
 
 def deadline_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
                   st: Dict[str, Any], t: jax.Array) -> Dict[str, Any]:
-    """Frame-boundary accounting for deadline (DASH) sources."""
+    """Frame-boundary accounting for deadline (HWA/DASH) sources.
+
+    Every elapsed frame is settled at its boundary as met or missed, so
+    `frames_released == dl_met + dl_missed` holds at any boundary-aligned
+    observation point (pinned by tests/test_nclass.py).
+    """
     has_dl = pool["dl_period"] > 0
     boundary = has_dl & (t > 0) & \
         (jnp.mod(t, jnp.maximum(pool["dl_period"], 1)) == 0)
     met = boundary & (st["period_done"] >= pool["dl_reqs"])
     st = dict(st)
+    st["frames_released"] = st["frames_released"] + boundary.astype(jnp.int32)
     st["dl_met"] = st["dl_met"] + met.astype(jnp.int32)
     st["dl_missed"] = st["dl_missed"] + (boundary & ~met).astype(jnp.int32)
     st["period_done"] = jnp.where(boundary, 0, st["period_done"])
@@ -292,6 +351,9 @@ def issue_channels(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any],
     st["sum_lat"] = accum_by_index(
         st["sum_lat"], src, (done - birth).astype(jnp.float32), do_issue)
     dram = energy.on_issue(cfg, dram, do_issue, src, is_hit, done)
+    if cfg.qos_enabled:
+        dram["lat_hist"] = qos.on_issue(cfg, dram["lat_hist"], src,
+                                        done - birth, do_issue)
     return dram, st
 
 

@@ -14,6 +14,19 @@ from typing import Tuple
 
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# requester classes (the N-class source model). A source's `src_class` picks
+# its traffic generator and its reporting bucket: CPU cores are
+# latency-sensitive MLP-limit cores, the GPU is a streaming wavefront
+# generator, HWAs are frame-deadline accelerators (SQUASH-style periodic
+# bursts). Extending the model = append a name here, teach
+# `engine.source_tick` the generator, and add archetypes in `workloads`
+# (see ROADMAP "Requester classes").
+# ---------------------------------------------------------------------------
+CLS_CPU, CLS_GPU, CLS_HWA = 0, 1, 2
+CLASS_NAMES: Tuple[str, ...] = ("cpu", "gpu", "hwa")
+N_CLASSES = len(CLASS_NAMES)
+
 
 @dataclass(frozen=True)
 class Timing:
@@ -43,6 +56,7 @@ class SimConfig:
 
     n_cpu: int = 8
     n_gpu: int = 1
+    n_hwa: int = 0                   # frame-deadline accelerators (CLS_HWA)
     n_channels: int = 1
     n_banks: int = 8                 # banks per channel
     n_rows: int = 4096               # rows per bank (address space)
@@ -61,6 +75,8 @@ class SimConfig:
     cpu_ipc: float = 2.0             # 3-wide OoO effective IPC between misses
     cpu_mshr: int = 8
     gpu_mshr: int = 128              # wavefront-scale outstanding requests
+    hwa_mshr: int = 128              # accelerator outstanding-request bound
+                                     # (frame bursts are dl_reqs-gated anyway)
 
     # policy knobs
     atlas_alpha: float = 0.875
@@ -95,11 +111,19 @@ class SimConfig:
     energy_pd: float = 0.025         # power-down, per channel-cycle
     energy_wake: float = 0.8         # power-down exit penalty, per wake
     energy_pd_idle: int = 48         # all-banks-idle cycles before power-down
+    # per-class QoS accounting (repro.core.qos): a per-source request-latency
+    # histogram maintained at issue time. Measurement-only, same contract as
+    # energy: flipping `qos_enabled` cannot change a scheduling decision.
+    qos_enabled: bool = True
+    lat_bins: int = 32               # histogram bins per source
+    lat_bin_width: int = 64          # cycles per bin (last bin open-ended):
+                                     # 2048-cycle range covers the queueing
+                                     # tails that p99 actually lives in
     timing: Timing = Timing()
 
     @property
     def n_src(self) -> int:
-        return self.n_cpu + self.n_gpu
+        return self.n_cpu + self.n_gpu + self.n_hwa
 
     @property
     def gpu_cap(self) -> int:
@@ -127,6 +151,11 @@ class SourcePool:
     # completed every dl_period cycles (0 = no deadline)
     dl_period: np.ndarray = None
     dl_reqs: np.ndarray = None
+    # N-class keys. When absent the simulator derives them (see
+    # `simulator.prepare_pool`): src_class from is_gpu/dl_period, jitter 0 —
+    # so legacy 2-class pools run bit-identically.
+    src_class: np.ndarray = None    # CLS_* id per source
+    dl_jitter: np.ndarray = None    # max per-frame release jitter, cycles
 
     def inst_per_miss(self) -> np.ndarray:
         return np.maximum(1000.0 / np.maximum(self.mpki, 1e-3), 1.0)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine, policy
+from repro.core.params import CLS_GPU, CLS_HWA
 from repro.core.schedulers import CentralizedPolicy, POL_BIT
 
 URGENT_BIT = POL_BIT << 1
@@ -33,8 +34,10 @@ class SquashPrio(CentralizedPolicy):
     name = "squash_prio"
     boundary_keys = ("sq_rng", "sq_prio")
     # stacked schema: (S,) rng/priority/urgency; the per-cycle policy_tick
-    # writes sq_urgent + pri_src on top of the boundary draw
-    stacked_tick_keys = boundary_keys + ("sq_urgent", "pri_src")
+    # writes sq_urgent + pri_src on top of the boundary draw, on_admit
+    # accumulates the urgent-admission QoS counter
+    stacked_tick_keys = boundary_keys + ("sq_urgent", "pri_src",
+                                         "sq_urgent_adm")
 
     def extra_state(self, cfg):
         S = cfg.n_src
@@ -44,6 +47,9 @@ class SquashPrio(CentralizedPolicy):
             "sq_rng": (jnp.arange(S, dtype=jnp.uint32) * jnp.uint32(747796405)
                        + jnp.uint32(2891336453)),
             "pri_src": jnp.zeros((S,), jnp.int32),
+            # admissions that jumped the queue on the urgent tier, per
+            # source (QoS accounting only; surfaced as `urgent_admits`)
+            "sq_urgent_adm": jnp.zeros((S,), jnp.int32),
         }
 
     def boundary_pred(self, cfg, pool, st, buf, t):
@@ -51,18 +57,25 @@ class SquashPrio(CentralizedPolicy):
 
     def boundary_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
-        is_accel = pool["dl_period"] > 0
+        is_accel = pool["src_class"] == CLS_HWA
         rng, u = engine.lcg_step(buf["sq_rng"])
         p = jnp.where(is_accel, cfg.squash_pb,
-                      jnp.where(pool["is_gpu"], cfg.squash_gpu_pb,
-                                cfg.squash_cpu_pb))
+                      jnp.where(pool["src_class"] == CLS_GPU,
+                                cfg.squash_gpu_pb, cfg.squash_cpu_pb))
         buf["sq_rng"] = rng
         buf["sq_prio"] = u < p
         return buf
 
+    def on_admit(self, cfg, pool, st, buf, do, slot, src, t):
+        buf = dict(buf)
+        buf["sq_urgent_adm"] = engine.accum_by_index(
+            buf["sq_urgent_adm"], src, 1, do & buf["sq_urgent"][src])
+        return buf
+
     def policy_tick(self, cfg, pool, st, buf, t):
         buf = dict(buf)
-        is_accel = pool["dl_period"] > 0
+        # urgency needs both the HWA class AND a live deadline stream
+        is_accel = (pool["src_class"] == CLS_HWA) & (pool["dl_period"] > 0)
         # urgent until ahead of the linear frame pace by squash_lead cycles:
         # done/reqs < (phase + lead)/period. (A lead keeps the source from
         # asymptotically tracking the pace line and missing by a hair; a

@@ -1,0 +1,68 @@
+"""Per-class QoS accounting: request-latency histograms in the hot loop.
+
+The N-class requester model (CPU+GPU+HWA) needs tail latency per class, but
+quantiles cannot be maintained incrementally from `sum_lat` alone. This
+module keeps a per-source latency histogram, accumulated at issue commit
+(when a request's completion time is known), from which per-class p95/p99
+are reduced host-side (`metrics.qos_breakdown`) — sources roll up to
+classes by masking rows with `pool["src_class"]`.
+
+Same contract as `repro.core.energy`: MEASUREMENT-ONLY. No histogram value
+ever feeds back into eligibility, scoring, or timing, so flipping
+`qos_enabled` leaves every scheduling decision bit-identical. Zero is a
+safe initial/padding value, and the single (S, BINS) counter rides the
+stacked cross-policy carry unchanged.
+
+Hot-loop rules compliance: the accumulation is one (C, S, BINS) one-hot
+mask summed over channels (rule 3 — no scatters), nothing sorts (rule 1),
+nothing rescans (rule 2).
+
+Accounting identity (pinned by tests/test_nclass.py):
+
+    lat_hist[s].sum() == issued[s]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import SimConfig
+
+# dram_state keys owned by this module (golden digests exclude them; the
+# digest tests whitelist exactly this tuple)
+STATE_KEYS = ("lat_hist",)
+
+
+def qos_state(cfg: SimConfig) -> Dict[str, Any]:
+    """QoS counters merged into `engine.dram_state` when enabled.
+
+    lat_hist[s, b]: requests from source s whose request latency (issue
+    commit time minus emission time, cycles) fell in bin b. Bins are
+    `lat_bin_width` cycles wide; the last bin is open-ended.
+    """
+    if not cfg.qos_enabled:
+        return {}
+    return {"lat_hist": jnp.zeros((cfg.n_src, cfg.lat_bins), jnp.int32)}
+
+
+def bin_upper_edges(cfg: SimConfig) -> np.ndarray:
+    """Host-side upper edge (cycles) of each histogram bin."""
+    return (np.arange(cfg.lat_bins, dtype=np.float64) + 1.0) \
+        * cfg.lat_bin_width
+
+
+def on_issue(cfg: SimConfig, hist: jax.Array, src: jax.Array,
+             lat: jax.Array, do_issue: jax.Array) -> jax.Array:
+    """hist[src[c], bin(lat[c])] += 1 where do_issue[c]; all args (C,).
+
+    One-hot masked accumulation over (C, S, BINS); duplicate sources
+    across channels accumulate, matching scatter-add.
+    """
+    b = jnp.clip(lat // cfg.lat_bin_width, 0, cfg.lat_bins - 1)
+    onehot = (jnp.arange(cfg.n_src)[None, :, None] == src[:, None, None]) \
+        & (jnp.arange(cfg.lat_bins)[None, None, :] == b[:, None, None]) \
+        & do_issue[:, None, None]
+    return hist + jnp.sum(onehot.astype(hist.dtype), axis=0)

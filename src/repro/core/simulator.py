@@ -20,15 +20,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
+from repro.core import params
 from repro.core import policy as policy_api
 from repro.core.params import SimConfig, SourcePool
 
 _SNAP_KEYS = ("insts_done", "emitted", "completed", "sum_lat", "dl_met",
-              "dl_missed")
+              "dl_missed", "frames_released")
 _DRAM_SNAP = ("hits", "issued")
 # energy accumulators are delta-measured like the service stats; present in
 # dram_state only when cfg.energy_enabled (checked against the live tree)
 _ENERGY_SNAP = ("e_act", "e_rw", "e_bg", "e_wake", "pd_cycles")
+# QoS latency histogram, present only when cfg.qos_enabled
+_QOS_SNAP = ("lat_hist",)
+# policy QoS counters surfaced from scheduler state when present (the
+# stacked union schema gives every slice the key; zeros for policies
+# without the counter)
+_SCHED_SNAP = {"sq_urgent_adm": "urgent_admits"}
 
 
 def __getattr__(name: str):
@@ -62,16 +69,20 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
     ((S,)-shaped stats) and the stacked step ((P, S)-shaped stats) alike.
     """
     carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup), unroll=unroll)
-    st_w, _, dram_w = carry
+    st_w, sched_w, dram_w = carry
     energy_on = all(k in dram_w for k in _ENERGY_SNAP)
+    qos_on = all(k in dram_w for k in _QOS_SNAP)
     snap = {k: st_w[k] for k in _SNAP_KEYS}
     snap.update({k: dram_w[k] for k in _DRAM_SNAP})
     if energy_on:
         snap.update({k: dram_w[k] for k in _ENERGY_SNAP})
+    if qos_on:
+        snap.update({k: dram_w[k] for k in _QOS_SNAP})
+    sched_snap = {k: sched_w[k] for k in _SCHED_SNAP if k in sched_w}
     carry, _ = jax.lax.scan(step, carry,
                             jnp.arange(warmup, warmup + n_cycles),
                             unroll=unroll)
-    st_f, _, dram_f = carry
+    st_f, sched_f, dram_f = carry
 
     cyc = jnp.float32(n_cycles)
     d = lambda k: (st_f[k] if k in st_f else dram_f[k]).astype(jnp.float32) \
@@ -90,7 +101,14 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
                               ).astype(jnp.float32),
         "dl_met": d("dl_met"),
         "dl_missed": d("dl_missed"),
+        "frames_released": d("frames_released"),
     }
+    if qos_on:
+        out["lat_hist"] = d("lat_hist")               # (S, BINS) counts
+    for k, name in _SCHED_SNAP.items():
+        if k in sched_snap:
+            out[name] = sched_f[k].astype(jnp.float32) \
+                - sched_snap[k].astype(jnp.float32)
     if energy_on:
         # per-source dynamic energy stays (S,)-shaped for the CPU/GPU class
         # breakdown; per-channel background collapses to totals
@@ -126,11 +144,24 @@ def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
                     )(pool_batch, active_batch)
 
 
-def _fill_deadline_keys(pool: Dict[str, Any], shape) -> Dict[str, Any]:
-    pool = dict(pool)
-    for k in ("dl_period", "dl_reqs"):
+def prepare_pool(pool: Dict[str, Any], shape, copy: bool = False
+                 ) -> Dict[str, Any]:
+    """The one pool-preparation path shared by every driver.
+
+    Moves the pool to device (fresh buffers when `copy`, for donation
+    safety) and completes the N-class schema: absent deadline-stream keys
+    are zero-filled, and absent `src_class` is derived from the legacy
+    `is_gpu`/`dl_period` partition — so 2-class pools run bit-identically
+    through the N-class engine.
+    """
+    pool = {k: jnp.array(v, copy=True) if copy else jnp.asarray(v)
+            for k, v in pool.items()}
+    for k in ("dl_period", "dl_reqs", "dl_jitter"):
         if k not in pool:
             pool[k] = jnp.zeros(shape, jnp.int32)
+    if "src_class" not in pool:
+        pool["src_class"] = engine.derive_src_class(pool["is_gpu"],
+                                                    pool["dl_period"])
     return pool
 
 
@@ -148,9 +179,8 @@ def simulate_async(cfg: SimConfig, policy: str,
     the donation to the jitted computation can never invalidate a caller's
     live jax array).
     """
-    pool_batch = {k: jnp.array(v, copy=True) for k, v in pool_batch.items()}
-    pool_batch = _fill_deadline_keys(pool_batch, np.asarray(
-        active_batch).shape)
+    pool_batch = prepare_pool(pool_batch, np.asarray(active_batch).shape,
+                              copy=True)
     with warnings.catch_warnings():
         # donation is shape-matched: the f32 pool columns alias into the
         # f32 metric outputs, the small int/bool ones can't — fine
@@ -229,9 +259,8 @@ def simulate_stacked_async(cfg: SimConfig, policies,
     scan body and jits into one XLA program, vmapped over (policy, workload).
     Same async-dispatch / buffer-copy contract as `simulate_async`.
     """
-    pool_batch = {k: jnp.array(v, copy=True) for k, v in pool_batch.items()}
-    pool_batch = _fill_deadline_keys(pool_batch, np.asarray(
-        active_batch).shape)
+    pool_batch = prepare_pool(pool_batch, np.asarray(active_batch).shape,
+                              copy=True)
     with warnings.catch_warnings():
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
@@ -270,8 +299,7 @@ def simulate_debug_stacked(cfg: SimConfig, policies,
     from repro.core import schedulers
 
     policies = tuple(policies)
-    pool = _fill_deadline_keys(
-        {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
+    pool = prepare_pool(pool, (cfg.n_src,))
     pols, carry = _init_stacked(cfg, policies)
     step = schedulers.make_stacked_step(cfg, pols, pool, jnp.asarray(active))
 
@@ -295,8 +323,7 @@ def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
     pool: dict of (S,) arrays; active: (S,) bool.
     Returns (src_state, sched_state, dram_state) as numpy trees.
     """
-    pool = _fill_deadline_keys(
-        {k: jnp.asarray(v) for k, v in pool.items()}, (cfg.n_src,))
+    pool = prepare_pool(pool, (cfg.n_src,))
     cfg, pol, carry = _init(cfg, policy)
     step = policy_api.make_step(cfg, pol, pool, jnp.asarray(active))
 
@@ -311,6 +338,13 @@ def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
 
 def perf_vector(cfg: SimConfig, metrics: Dict[str, np.ndarray],
                 pool_batch: Dict[str, np.ndarray]) -> np.ndarray:
-    """Per-source performance: IPC for CPUs, attained BW for the GPU. (W,S)."""
-    is_gpu = np.asarray(pool_batch["is_gpu"], bool)
-    return np.where(is_gpu, metrics["bw"], metrics["ipc"])
+    """Per-source performance, (W, S): IPC for CPU-class sources, attained
+    BW for the streaming classes (GPU, HWA)."""
+    if "src_class" in pool_batch:
+        cls = np.asarray(pool_batch["src_class"])
+    else:
+        dlp = np.asarray(pool_batch.get(
+            "dl_period", np.zeros_like(pool_batch["is_gpu"], np.int32)))
+        cls = np.asarray(engine.derive_src_class(
+            np.asarray(pool_batch["is_gpu"], bool), dlp))
+    return np.where(cls == params.CLS_CPU, metrics["ipc"], metrics["bw"])

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.params import SimConfig
+from repro.core.params import CLS_HWA, SimConfig
 
 
 def sms_state(cfg: SimConfig) -> Dict[str, Any]:
@@ -142,10 +142,10 @@ def stage2_drain(cfg: SimConfig, pool, st, sms, t):
     rr_pick = jnp.argmin(rr_key, axis=-1)
     pick = jnp.where(use_sjf, sjf_pick, rr_pick)
     if cfg.dash:
-        # SMS-DASH (paper §7 / Usui et al.): a deadline source whose frame
-        # slack is below its estimated remaining service time preempts the
-        # SJF/RR choice; least-slack-first among urgent ready batches.
-        has_dl = pool["dl_period"] > 0
+        # SMS-DASH (paper §7 / Usui et al.): an HWA whose frame slack is
+        # below its estimated remaining service time preempts the SJF/RR
+        # choice; least-slack-first among urgent ready batches.
+        has_dl = (pool["src_class"] == CLS_HWA) & (pool["dl_period"] > 0)
         remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
         time_left = pool["dl_period"] - jnp.mod(
             t, jnp.maximum(pool["dl_period"], 1))

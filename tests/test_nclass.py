@@ -1,0 +1,210 @@
+"""N-class requester model: 2-class bit-identity through the N-class
+engine, HWA frame-deadline accounting identities, stacked-path parity for
+the new pool keys, and the measurement-only QoS contract."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, metrics as met, policy, qos
+from repro.core import simulator as sim
+from repro.core.params import CLS_CPU, CLS_GPU, CLS_HWA, SimConfig
+
+CFG2 = SimConfig(n_cpu=3, n_gpu=1, n_channels=2, buf_entries=32,
+                 fifo_size=5, dcs_size=3)
+CFG3 = CFG2.replace(n_hwa=2)
+CYCLES, WARMUP = 2_000, 500
+
+
+def _legacy_pool():
+    """2-class pool with only the legacy keys (no src_class/dl_jitter)."""
+    mpki = np.array([25, 40, 18, 1000], np.float32)
+    return {
+        "mpki": mpki, "inst_per_miss": np.maximum(1000 / mpki, 1),
+        "rbl": np.array([.5, .4, .6, .9], np.float32),
+        "blp": np.array([3, 2, 4, 4], np.int32),
+        "is_gpu": np.array([0, 0, 0, 1], bool),
+    }
+
+
+def _nclass_pool(jitter=(12, 0)):
+    """3 CPUs + 1 GPU + 2 frame-deadline HWAs, full N-class schema."""
+    mpki = np.array([25, 40, 18, 1000, 1000, 1000], np.float32)
+    return {
+        "mpki": mpki, "inst_per_miss": np.maximum(1000 / mpki, 1),
+        "rbl": np.array([.5, .4, .6, .9, .85, .7], np.float32),
+        "blp": np.array([3, 2, 4, 4, 2, 3], np.int32),
+        "is_gpu": np.array([0, 0, 0, 1, 0, 0], bool),
+        "src_class": np.array([CLS_CPU] * 3 + [CLS_GPU] + [CLS_HWA] * 2,
+                              np.int32),
+        "dl_period": np.array([0, 0, 0, 0, 500, 400], np.int32),
+        "dl_reqs": np.array([0, 0, 0, 0, 25, 15], np.int32),
+        "dl_jitter": np.array([0, 0, 0, 0, jitter[0], jitter[1]], np.int32),
+    }
+
+
+def _batch(pool):
+    return {k: v[None] for k, v in pool.items()}
+
+
+def _run(cfg, pol, pool, n_cycles=CYCLES, warmup=WARMUP):
+    active = np.ones((1, cfg.n_src), bool)
+    return sim.simulate(cfg, pol, _batch(pool), active, n_cycles, warmup)
+
+
+def _expected_frames(period, warmup=WARMUP, n_cycles=CYCLES):
+    return sum(1 for t in range(warmup, warmup + n_cycles)
+               if t > 0 and t % period == 0)
+
+
+# ---------------------------------------------------------------------------
+# 2-class golden equivalence: the N-class engine is a strict superset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol", policy.names())
+def test_legacy_pool_bit_identical_to_explicit_classes(pol):
+    """A legacy is_gpu pool and the same pool with the N-class keys spelled
+    out (derived src_class, zero deadline stream) must be bit-identical —
+    the schema completion in `prepare_pool` is the only difference."""
+    legacy = _legacy_pool()
+    explicit = dict(legacy)
+    explicit["src_class"] = np.array([CLS_CPU, CLS_CPU, CLS_CPU, CLS_GPU],
+                                     np.int32)
+    for k in ("dl_period", "dl_reqs", "dl_jitter"):
+        explicit[k] = np.zeros(CFG2.n_src, np.int32)
+    a = _run(CFG2, pol, legacy)
+    b = _run(CFG2, pol, explicit)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{pol}:{k}")
+
+
+def test_derive_src_class_reproduces_legacy_partition():
+    is_gpu = np.array([0, 1, 0, 0], bool)
+    dlp = np.array([0, 0, 0, 700], np.int32)
+    cls = np.asarray(engine.derive_src_class(is_gpu, dlp))
+    np.testing.assert_array_equal(
+        cls, [CLS_CPU, CLS_GPU, CLS_CPU, CLS_HWA])
+
+
+# ---------------------------------------------------------------------------
+# HWA frame-deadline accounting identities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol", ("frfcfs", "sms_dash"))
+def test_frame_accounting_identity(pol):
+    """frames_released == dl_met + dl_missed, released count matches the
+    period boundaries inside the measurement window, and non-deadline
+    sources never release frames."""
+    m = _run(CFG3, pol, _nclass_pool())
+    rel = m["frames_released"][0]
+    np.testing.assert_array_equal(rel, m["dl_met"][0] + m["dl_missed"][0],
+                                  err_msg=pol)
+    assert rel[4] == _expected_frames(500)
+    assert rel[5] == _expected_frames(400)
+    assert (rel[:4] == 0).all()
+
+
+def test_lat_hist_counts_every_issue():
+    """The QoS histogram is maintained on the same do_issue commit as the
+    per-source issue counter: row sums must match exactly."""
+    cfg = CFG3
+    _, _, dram = sim.simulate_debug(cfg, "frfcfs", _nclass_pool(),
+                                    np.ones(cfg.n_src, bool), 1_500)
+    np.testing.assert_array_equal(dram["lat_hist"].sum(-1), dram["issued"])
+    assert dram["issued"].sum() > 0
+
+
+def test_frame_release_offset_is_bounded_and_stateless():
+    jitter = np.array([0, 5, 12], np.int32)
+    offs = np.stack([
+        np.asarray(engine.frame_release_offset(3, np.int32(f), jitter))
+        for f in range(32)])                                  # (F, S)
+    assert (offs >= 0).all() and (offs <= jitter[None, :]).all()
+    assert (offs[:, 0] == 0).all()          # zero jitter -> offset 0
+    assert len(np.unique(offs[:, 2])) > 1   # hash actually varies by frame
+    again = np.asarray(engine.frame_release_offset(3, np.int32(7), jitter))
+    np.testing.assert_array_equal(again, offs[7])
+
+
+def test_jitter_delays_release_not_accounting():
+    """Jitter shifts emission inside the frame but the deadline stream
+    (boundaries, met+missed identity) is untouched."""
+    m0 = _run(CFG3, "frfcfs", _nclass_pool(jitter=(0, 0)))
+    mj = _run(CFG3, "frfcfs", _nclass_pool(jitter=(120, 90)))
+    for m in (m0, mj):
+        np.testing.assert_array_equal(
+            m["frames_released"][0, 4:], [_expected_frames(500),
+                                          _expected_frames(400)])
+    # the jittered run emitted through a shorter effective window
+    assert mj["emitted"][0, 4:].sum() <= m0["emitted"][0, 4:].sum()
+
+
+# ---------------------------------------------------------------------------
+# stacked-path parity for the new pool keys
+# ---------------------------------------------------------------------------
+
+def test_stacked_parity_on_3class_pool():
+    """Every stackable policy's slice of the stacked run must equal its
+    per-policy run on a 3-class pool — the new keys (src_class, dl_jitter,
+    frames_released, lat_hist, sq_urgent_adm) ride the union schema."""
+    cfg = CFG3
+    pool, active = _nclass_pool(), np.ones((1, cfg.n_src), bool)
+    fam = sim.stackable_names(cfg)
+    assert "squash_prio" in fam
+    stacked = sim.simulate_stacked(cfg, fam, _batch(pool), active,
+                                   CYCLES, WARMUP)
+    for pol in fam:
+        solo = _run(cfg, pol, pool)
+        for k in solo:
+            np.testing.assert_array_equal(
+                stacked[pol][k], solo[k], err_msg=f"{pol}:{k}")
+
+
+def test_squash_urgent_admissions_only_on_deadline_sources():
+    m = _run(CFG3, "squash_prio", _nclass_pool(), n_cycles=4_000)
+    ua = m["urgent_admits"][0]
+    assert ua[4:].sum() > 0, "HWA mix never hit the urgent tier"
+    assert (ua[:4] == 0).all(), "urgent tier admitted a non-deadline source"
+    # per-policy runs of urgent-tier-free policies don't grow the key
+    assert "urgent_admits" not in _run(CFG3, "frfcfs", _nclass_pool())
+
+
+# ---------------------------------------------------------------------------
+# measurement-only contract + per-class reductions
+# ---------------------------------------------------------------------------
+
+def test_qos_disabled_only_removes_the_histogram():
+    off = CFG3.replace(qos_enabled=False)
+    assert qos.qos_state(off) == {}
+    m_on = _run(CFG3, "atlas", _nclass_pool())
+    m_off = _run(off, "atlas", _nclass_pool())
+    assert set(m_on) - set(m_off) == {"lat_hist"}
+    for k in m_off:
+        np.testing.assert_array_equal(m_on[k], m_off[k], err_msg=k)
+
+
+def test_qos_breakdown_reductions():
+    cfg = CFG3
+    pool = _nclass_pool()
+    m = _run(cfg, "sms_dash", pool)
+    qb = met.qos_breakdown(cfg, m, _batch(pool))
+    assert 0.0 <= qb["dl_met_rate"][0] <= 1.0
+    assert qb["frames_released"][0] == \
+        _expected_frames(500) + _expected_frames(400)
+    edges = qos.bin_upper_edges(cfg)
+    for kname in ("cpu", "gpu", "hwa"):
+        p95, p99 = qb[f"lat_p95_{kname}"][0], qb[f"lat_p99_{kname}"][0]
+        assert 0 < p95 <= p99 <= edges[-1]
+    # hand-rolled p99 of the CPU-pooled histogram must agree
+    pooled = np.asarray(m["lat_hist"][0, :3]).sum(0)
+    np.testing.assert_allclose(
+        qb["lat_p99_cpu"][0], met.hist_quantile(pooled, edges, 0.99))
+
+
+def test_class_masked_max_slowdown():
+    s = np.array([1.5, 3.0, 2.0, 4.0])
+    cls = np.array([CLS_CPU, CLS_CPU, CLS_GPU, CLS_HWA])
+    assert met.max_slowdown(s) == 4.0
+    assert met.max_slowdown(s, cls == CLS_CPU) == 3.0
+    assert met.max_slowdown(s, cls == CLS_HWA) == 4.0
+    assert np.isnan(met.max_slowdown(s, cls == 99))

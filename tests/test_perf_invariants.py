@@ -24,7 +24,7 @@ import numpy as np
 import pytest
 
 from repro import compat
-from repro.core import energy
+from repro.core import energy, engine, qos
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
@@ -46,10 +46,8 @@ def _dummy_pool(cfg):
     pool = {k: jnp.zeros((S,), jnp.float32)
             for k in ("mpki", "inst_per_miss", "rbl")}
     pool.update(blp=jnp.ones((S,), jnp.int32),
-                is_gpu=jnp.zeros((S,), bool),
-                dl_period=jnp.zeros((S,), jnp.int32),
-                dl_reqs=jnp.zeros((S,), jnp.int32))
-    return pool
+                is_gpu=jnp.zeros((S,), bool))
+    return sim.prepare_pool(pool, (S,))
 
 
 # jaxpr-walking helpers live in repro.compat (the Jaxpr/ClosedJaxpr types
@@ -106,6 +104,46 @@ def test_energy_accounting_adds_no_sorts_or_scatters():
         assert on == off, (
             f"{name}: energy accounting changed sort/scatter/gather "
             f"population: {off} -> {on}")
+
+
+def test_qos_accounting_adds_no_sorts_or_scatters():
+    """Same hot-loop contract for repro.core.qos: the latency histogram is
+    a one-hot masked accumulation, so enabling it must add zero
+    sort/scatter/gather primitives to the step jaxpr."""
+    assert CFG.qos_enabled
+
+    def counts(jx):
+        out = {}
+        for p, _ in _walk_prims(jx.jaxpr):
+            fam = next((f for f in ("sort", "scatter", "gather")
+                        if p.startswith(f)), None)
+            if fam:
+                out[fam] = out.get(fam, 0) + 1
+        return out
+
+    off_cfg = CFG.replace(qos_enabled=False)
+    for name in ("frfcfs", "atlas", "sms"):
+        on, off = counts(_step_jaxpr(name)), counts(_step_jaxpr(name, off_cfg))
+        assert on == off, (
+            f"{name}: QoS accounting changed sort/scatter/gather "
+            f"population: {off} -> {on}")
+
+
+def test_simspeed_bench_recorded_speedup_holds():
+    """House gate on the recorded benchmark file: the sweep throughput
+    captured in BENCH_simspeed.json must hold the hot-loop optimization win
+    over the pre-optimization baseline. Refresh with `make bench-simspeed`
+    after hot-loop signature changes — a refreshed "current" that falls
+    under the gate means a real cycles/sec regression."""
+    path = Path(__file__).parents[1] / "BENCH_simspeed.json"
+    data = json.loads(path.read_text())
+    ratio = data.get("sweep_speedup_vs_baseline_x")
+    assert ratio is not None, \
+        "BENCH_simspeed.json is missing the sweep speedup — run " \
+        "`make bench-simspeed` to remeasure"
+    assert ratio >= 2.0, (
+        f"recorded sweep speedup {ratio:.2f}x < 2x baseline — the hot loop "
+        f"regressed (or the BENCH file needs a remeasure on faster hardware)")
 
 
 def test_scan_carry_has_no_pool_or_active():
@@ -171,8 +209,10 @@ def test_cond_refactor_bit_identical(policy_name):
     for part, tree in (("src", st_f), ("dram", dram_f)):
         new = _digest(tree)
         extra = set(new) - set(g[part])
-        assert extra <= set(energy.STATE_KEYS), \
-            f"{policy_name} {part} grew non-energy keys: {extra}"
+        allowed = set(energy.STATE_KEYS) | set(qos.STATE_KEYS) \
+            if part == "dram" else set(engine.NCLASS_SRC_KEYS)
+        assert extra <= allowed, \
+            f"{policy_name} {part} grew unexpected keys: {extra}"
         for k, h in g[part].items():
             assert new[k] == h, f"{policy_name} {part}[{k}] diverged"
     sched = _digest(sched_f)

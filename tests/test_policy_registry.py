@@ -16,7 +16,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
-from repro.core import energy, policy
+from repro.core import energy, engine, policy, qos
 from repro.core import simulator as sim
 from repro.core.params import SimConfig
 from repro.serving.scheduler import SCHEDULERS as SERVING_SCHEDULERS
@@ -80,7 +80,10 @@ def test_ported_policy_bit_identical(policy_name):
     g = GOLDEN[policy_name]
     for part, tree in (("src", st_f), ("dram", dram_f)):
         new = _digest(tree)
-        allowed = set(energy.STATE_KEYS) if part == "dram" else set()
+        # additive-only subsystems may add keys on top of the goldens:
+        # energy + QoS counters (dram), N-class frame accounting (src)
+        allowed = set(energy.STATE_KEYS) | set(qos.STATE_KEYS) \
+            if part == "dram" else set(engine.NCLASS_SRC_KEYS)
         assert set(new) ^ set(g[part]) <= allowed, \
             f"{policy_name} {part} keys drifted: {set(new) ^ set(g[part])}"
         for k, h in g[part].items():

@@ -27,7 +27,7 @@ import numpy as np
 import pytest
 
 from repro import compat
-from repro.core import energy
+from repro.core import energy, engine, qos
 from repro.core import policy as policy_api
 from repro.core import schedulers
 from repro.core import simulator as sim
@@ -96,9 +96,12 @@ def test_stacked_slice_bit_identical_to_golden(policy_name,
     g = GOLDEN[policy_name]
     for part, tree in (("src", st_f), ("dram", dram_f)):
         new = _digest(tree)
-        # energy counters are additive-only extras on the stacked path too:
-        # every pre-energy golden key must still match bit-for-bit
-        assert set(new) ^ set(g[part]) <= set(energy.STATE_KEYS), \
+        # energy/QoS counters and the N-class frame accounting are
+        # additive-only extras on the stacked path too: every pre-existing
+        # golden key must still match bit-for-bit
+        allowed = set(energy.STATE_KEYS) | set(qos.STATE_KEYS) \
+            if part == "dram" else set(engine.NCLASS_SRC_KEYS)
+        assert set(new) ^ set(g[part]) <= allowed, \
             f"{policy_name} {part} keys drifted: {set(new) ^ set(g[part])}"
         for k, h in g[part].items():
             assert new[k] == h, f"{policy_name} {part}[{k}] diverged"
@@ -158,10 +161,9 @@ def _stacked_step_jaxpr():
     pool = {k: jnp.zeros((S,), jnp.float32)
             for k in ("mpki", "inst_per_miss", "rbl")}
     pool.update(blp=jnp.ones((S,), jnp.int32),
-                is_gpu=jnp.zeros((S,), bool),
-                dl_period=jnp.zeros((S,), jnp.int32),
-                dl_reqs=jnp.zeros((S,), jnp.int32))
-    step = schedulers.make_stacked_step(CFG, pols, pool,
+                is_gpu=jnp.zeros((S,), bool))
+    step = schedulers.make_stacked_step(CFG, pols,
+                                        sim.prepare_pool(pool, (S,)),
                                         jnp.ones((S,), bool))
     return jax.make_jaxpr(step)(carry, jnp.int32(5))
 
