@@ -11,6 +11,17 @@ sweep also counts compiled XLA programs and asserts the one-program
 property for the stacked family — `make bench-smoke` is the CI gate
 against accidental de-stacking.
 
+The "event_skip" section measures the variable-step driver: steady-state
+wall-clock of the ticked scan vs the event-skipping while_loop on the
+bursty archetype family (idle-dominated — the skip payoff) and on the
+standard fig4-style mix (saturated — documents the per-step witness
+overhead that keeps the skipping driver opt-in; the standard sweeps
+tick), plus per-archetype skip ratios from the `sim_steps` metric. Throughput is reported on two
+bases: ``cycles_per_s`` (simulated cycle-workloads per wall-second —
+what cycle skipping improves) and ``steps_per_s`` (processed loop steps
+per wall-second — per-step cost, which skipping must NOT regress), so
+speedups are never conflated with skip ratio.
+
 Results land in ``BENCH_simspeed.json`` at the repo root. The file keeps
 two sections: ``baseline`` (the first measurement ever recorded — the
 pre-optimization reference) and ``current`` (refreshed on every full-scale
@@ -32,6 +43,7 @@ from pathlib import Path
 from typing import Dict, Sequence
 
 import jax
+import numpy as np
 
 from benchmarks import common
 from repro import compat
@@ -49,6 +61,11 @@ POLICY_SCALE = dict(n_per_cat=4, n_cycles=3_000, warmup=500)
 # the stacked path is for. Must not collide with SWEEP_SCALE's static args
 # or the later all-policy sweep would find warm jit caches.
 FAMILY_SCALE = dict(n_per_cat=4, n_cycles=2_000, warmup=500)
+# ticked vs event-skipping driver comparison: steady-state (both modes
+# compiled before timing), long cycle counts so the per-step loop cost
+# dominates the dispatch overhead. Distinct static args again, so neither
+# mode's program pollutes the sweep/family compile counts.
+EVENT_SCALE = dict(n_per_cat=4, n_cycles=12_000, warmup=1_500)
 
 
 def measure_per_policy(policies: Sequence[str], n_per_cat: int,
@@ -63,13 +80,21 @@ def measure_per_policy(policies: Sequence[str], n_per_cat: int,
         t0 = time.time()
         sim.simulate(cfg, pol, pool, active, n_cycles, warmup)
         t1 = time.time()
-        sim.simulate(cfg, pol, pool, active, n_cycles, warmup)
+        m = sim.simulate(cfg, pol, pool, active, n_cycles, warmup)
         t2 = time.time()
+        # `cycles_per_s` counts SIMULATED cycles: under the event-skipping
+        # driver it credits jumped idle spans. `steps_per_s` counts cycles
+        # the loop actually processed (scaled by the measured-window skip
+        # ratio) — the per-step cost basis, immune to skip-ratio inflation.
+        cps = (n_cycles + warmup) * W / (t2 - t1)
+        ratio = 1.0 - float(np.mean(m["sim_steps"])) / n_cycles
         out[pol] = {
             "first_call_s": round(t1 - t0, 3),
             "steady_s": round(t2 - t1, 3),
             "compile_s": round((t1 - t0) - (t2 - t1), 3),
-            "cycles_per_s": round((n_cycles + warmup) * W / (t2 - t1), 1),
+            "cycles_per_s": round(cps, 1),
+            "steps_per_s": round(cps * (1.0 - ratio), 1),
+            "skip_ratio": round(ratio, 3),
         }
     return out
 
@@ -154,12 +179,92 @@ def measure_stacked_family(n_per_cat: int, n_cycles: int, warmup: int
     return out
 
 
+def measure_event_skip(n_per_cat: int, n_cycles: int, warmup: int) -> Dict:
+    """Ticked vs event-skipping driver, steady state, stacked family.
+
+    Bursty archetype family: one stacked dispatch PER archetype (a batch
+    would couple them — the shared while_loop runs until the least-skippy
+    row finishes, capping the family win at the worst row's ratio), timed
+    both ways after both modes are compiled; the family figure is the
+    summed wall-clock. Standard fig4-style mix: one batched dispatch both
+    ways — saturated traffic skips almost nothing, so this documents the
+    witness overhead that makes the skipping driver OPT-IN
+    (`sim.DEFAULT_SKIP`). Compile-count deltas per mode are recorded so
+    the smoke gate can assert the skipping family still rides ONE stacked
+    XLA program. Skip ratios come from the `sim_steps` metric
+    (family-common: the stacked slices share one loop).
+    """
+    out = {"n_cycles": n_cycles, "warmup": warmup}
+    cfgb = common.parity_config(n_cpu=4, n_hwa=2)
+    famb = list(sim.stackable_names(cfgb))
+    bpool, bact = wl.bursty_batch(cfgb)
+    rows = [({k: v[i:i + 1] for k, v in bpool.items()}, bact[i:i + 1])
+            for i in range(len(wl.BURSTY_ARCHETYPES))]
+    programs = {}
+    for mode, skip in (("ticked", False), ("skipping", True)):
+        before = compat.jit_cache_size(sim._sim_batch_stacked)
+        sim.simulate_stacked(cfgb, famb, *rows[0], n_cycles, warmup,
+                             skip=skip)
+        programs[mode] = compat.jit_cache_size(sim._sim_batch_stacked) \
+            - before
+    per, tick_total, skip_total = {}, 0.0, 0.0
+    for (p1, a1), name in zip(rows, wl.BURSTY_ARCHETYPES):
+        t0 = time.time()
+        sim.simulate_stacked(cfgb, famb, p1, a1, n_cycles, warmup,
+                             skip=False)
+        wt = time.time() - t0
+        t0 = time.time()
+        m = sim.simulate_stacked(cfgb, famb, p1, a1, n_cycles, warmup,
+                                 skip=True)
+        ws = time.time() - t0
+        ratio = 1.0 - float(m[famb[0]]["sim_steps"][0]) / n_cycles
+        per[name] = {"ticked_wall_s": round(wt, 3),
+                     "skipping_wall_s": round(ws, 3),
+                     "speedup_x": round(wt / max(ws, 1e-9), 2),
+                     "skip_ratio": round(ratio, 3)}
+        tick_total += wt
+        skip_total += ws
+    out["bursty"] = {
+        "policies": famb,
+        "archetypes": per,
+        "skip_ratio": {a: per[a]["skip_ratio"] for a in per},
+        "ticked_wall_s": round(tick_total, 3),
+        "skipping_wall_s": round(skip_total, 3),
+        "speedup_x": round(tick_total / max(skip_total, 1e-9), 2),
+        "ticked_xla_programs": programs["ticked"],
+        "skipping_xla_programs": programs["skipping"],
+    }
+
+    cfgs = common.parity_config()
+    fams = list(sim.stackable_names(cfgs))
+    wls = wl.make_workloads(cfgs.n_cpu, n_per_cat=n_per_cat)
+    pool, active = wl.pool_batch(cfgs, wls)
+    sres = {"n_workloads": len(wls)}
+    for mode, skip in (("ticked", False), ("skipping", True)):
+        before = compat.jit_cache_size(sim._sim_batch_stacked)
+        sim.simulate_stacked(cfgs, fams, pool, active, n_cycles, warmup,
+                             skip=skip)
+        sres[f"{mode}_xla_programs"] = \
+            compat.jit_cache_size(sim._sim_batch_stacked) - before
+        t0 = time.time()
+        m = sim.simulate_stacked(cfgs, fams, pool, active, n_cycles,
+                                 warmup, skip=skip)
+        sres[f"{mode}_wall_s"] = round(time.time() - t0, 3)
+    sres["speedup_x"] = round(sres["ticked_wall_s"]
+                              / max(sres["skipping_wall_s"], 1e-9), 2)
+    sres["mean_skip_ratio"] = round(
+        1.0 - float(np.mean(m[fams[0]]["sim_steps"])) / n_cycles, 3)
+    out["fig4_mix"] = sres
+    return out
+
+
 def main(sweep_scale: Dict = None, policy_scale: Dict = None,
-         family_scale: Dict = None, write: bool = True,
-         summary_out: str = None) -> Dict:
+         family_scale: Dict = None, event_scale: Dict = None,
+         write: bool = True, summary_out: str = None) -> Dict:
     sweep_scale = sweep_scale or SWEEP_SCALE
     policy_scale = policy_scale or POLICY_SCALE
     family_scale = family_scale or FAMILY_SCALE
+    event_scale = event_scale or EVENT_SCALE
     policies = list(sim.ALL_POLICIES)
     # the energy subsystem rides the hot loop by default; the compile-count
     # and trace-size gates below are only meaningful if they cover it
@@ -182,6 +287,13 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
     nclass = measure_nclass_smoke()
     print(f"  3-class smoke ({len(nclass['policies'])} policies, "
           f"{nclass['n_hwa']} HWAs): xla_programs={nclass['xla_programs']}")
+    event = measure_event_skip(**event_scale)
+    print(f"  event skip: bursty {event['bursty']['ticked_wall_s']}s ticked"
+          f" vs {event['bursty']['skipping_wall_s']}s skipping "
+          f"({event['bursty']['speedup_x']}x, "
+          f"ratios={event['bursty']['skip_ratio']}); fig4 mix "
+          f"{event['fig4_mix']['speedup_x']}x at mean skip ratio "
+          f"{event['fig4_mix']['mean_skip_ratio']}")
 
     current = {
         "meta": {
@@ -191,11 +303,13 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
             "sweep_scale": dict(sweep_scale),
             "policy_scale": dict(policy_scale),
             "family_scale": dict(family_scale),
+            "event_scale": dict(event_scale),
         },
         "per_policy": per_policy,
         "stacked_family": family,
         "sweep": sweep,
         "nclass_smoke": nclass,
+        "event_skip": event,
     }
     # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
     # program through the sweep — with energy accounting enabled (asserted
@@ -211,6 +325,15 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
             sweep["xla_programs"]["per_policy"] == n_fallback,
         "expected_fallbacks": n_fallback,
         "nclass_one_program": nclass["xla_programs"] == 1,
+        # the event-skipping driver is a second while_loop body, not a
+        # second program per policy: one stacked compile per batch shape
+        "skip_one_program":
+            event["bursty"]["skipping_xla_programs"] == 1
+            and event["fig4_mix"]["skipping_xla_programs"] == 1,
+        # idle_cpu is the archetype whose spans stay long even at smoke
+        # cycle counts; a collapse here means witnesses got conservative
+        "bursty_min_skip_ratio_ok":
+            event["bursty"]["skip_ratio"]["idle_cpu"] >= 0.5,
     }
     if summary_out:
         Path(summary_out).write_text(json.dumps(
@@ -221,6 +344,12 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
     assert gates["nclass_one_program"], \
         f"3-class mix de-stacked the family: {nclass['xla_programs']} programs"
+    assert gates["skip_one_program"], \
+        "skipping driver de-stacked the family: " \
+        f"bursty={event['bursty']['skipping_xla_programs']} " \
+        f"fig4={event['fig4_mix']['skipping_xla_programs']} programs"
+    assert gates["bursty_min_skip_ratio_ok"], \
+        f"idle_cpu skip ratio collapsed: {event['bursty']['skip_ratio']}"
     data = {}
     if BENCH_PATH.exists():
         data = json.loads(BENCH_PATH.read_text())
@@ -262,6 +391,7 @@ if __name__ == "__main__":
         main(sweep_scale=dict(n_per_cat=1, n_cycles=300, warmup=100),
              policy_scale=dict(n_per_cat=1, n_cycles=200, warmup=50),
              family_scale=dict(n_per_cat=1, n_cycles=250, warmup=50),
+             event_scale=dict(n_per_cat=1, n_cycles=400, warmup=80),
              write=False, summary_out=args.summary_out)
     else:
         main(summary_out=args.summary_out)

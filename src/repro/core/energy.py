@@ -26,12 +26,19 @@ or one-hot masked accumulations (rule 3 — no scatters); the power-down
 state machine is maintained from the incremental `busy_until` watermark
 (rule 2 — no per-cycle reduction over banks); nothing sorts (rule 1).
 
+Background energy is held as integer CYCLE COUNTERS (`sb_cycles` standby,
+`pd_cycles` power-down) rather than a float accumulator: the variable-step
+driver charges a whole skipped span in one add, and only integer counters
+make that bit-identical to per-cycle accrual (k repeated f32 adds of 0.10
+!= one add of k*0.10). The nJ value is derived at metric time:
+
+    energy_bg == energy_standby * sb_cycles + energy_pd * pd_cycles
+
 Accounting identities (pinned by tests/test_energy.py):
 
     e_rw[s]  == energy_rw  * issued[s]
     e_act[s] == energy_act * (issued[s] - hits[s])
-    sum(e_bg) == energy_pd * pd_cycles
-                 + energy_standby * (C * cycles - pd_cycles)
+    sum(sb_cycles) + sum(pd_cycles) == C * cycles
 """
 from __future__ import annotations
 
@@ -44,17 +51,18 @@ from repro.core.params import SimConfig
 
 # dram_state keys owned by this module (per-policy goldens exclude them;
 # tests assert their presence so the additivity check is never vacuous)
-STATE_KEYS = ("e_act", "e_rw", "e_bg", "e_wake", "pd_down", "pd_cycles",
+STATE_KEYS = ("e_act", "e_rw", "sb_cycles", "e_wake", "pd_down", "pd_cycles",
               "busy_until")
 
 
 def energy_state(cfg: SimConfig) -> Dict[str, Any]:
     """Energy counters merged into `engine.dram_state` when enabled.
 
-    e_act/e_rw: per-source dynamic energy (nJ); e_bg/e_wake: per-channel
-    background + wake-up energy; pd_down/pd_cycles/busy_until: the
-    power-down state machine (busy_until is the running max of bank busy
-    horizons, maintained at issue — never recomputed from `bank_free`).
+    e_act/e_rw: per-source dynamic energy (nJ); sb_cycles/e_wake:
+    per-channel standby-cycle counter + wake-up energy; pd_down/pd_cycles/
+    busy_until: the power-down state machine (busy_until is the running max
+    of bank busy horizons, maintained at issue — never recomputed from
+    `bank_free`).
     """
     if not cfg.energy_enabled:
         return {}
@@ -62,7 +70,7 @@ def energy_state(cfg: SimConfig) -> Dict[str, Any]:
     return {
         "e_act": jnp.zeros((S,), jnp.float32),
         "e_rw": jnp.zeros((S,), jnp.float32),
-        "e_bg": jnp.zeros((C,), jnp.float32),
+        "sb_cycles": jnp.zeros((C,), jnp.int32),
         "e_wake": jnp.zeros((C,), jnp.float32),
         "pd_down": jnp.zeros((C,), bool),
         "pd_cycles": jnp.zeros((C,), jnp.int32),
@@ -84,9 +92,33 @@ def background_tick(cfg: SimConfig, dram: Dict[str, Any], t: jax.Array
     idle_long = t - dram["busy_until"] >= cfg.energy_pd_idle
     pd = dram["pd_down"] | idle_long
     dram["pd_down"] = pd
-    dram["e_bg"] = dram["e_bg"] + jnp.where(
-        pd, jnp.float32(cfg.energy_pd), jnp.float32(cfg.energy_standby))
+    dram["sb_cycles"] = dram["sb_cycles"] + (~pd).astype(jnp.int32)
     dram["pd_cycles"] = dram["pd_cycles"] + pd.astype(jnp.int32)
+    return dram
+
+
+def skip_accrue(cfg: SimConfig, dram: Dict[str, Any], t: jax.Array,
+                t_new: jax.Array) -> Dict[str, Any]:
+    """Charge background cycles for the skipped span t+1 .. t_new-1 in one
+    add — exactly what k = t_new-1-t calls of `background_tick` would do.
+
+    Valid under the witness contract: no issue lands inside the span, so
+    `busy_until` is frozen and the only transition is standby -> power-down
+    at `enter = busy_until + energy_pd_idle`. The closed form splits the
+    span at that entry cycle; the final `pd_down` OR is a no-op when k == 0
+    (cycle t's own `background_tick` already applied the same predicate).
+    """
+    if not cfg.energy_enabled:
+        return dram
+    dram = dict(dram)
+    k = t_new - 1 - t
+    enter = dram["busy_until"] + cfg.energy_pd_idle
+    n_pd = jnp.where(
+        dram["pd_down"], k,
+        jnp.clip(t_new - jnp.maximum(enter, t + 1), 0, k))
+    dram["pd_cycles"] = dram["pd_cycles"] + n_pd
+    dram["sb_cycles"] = dram["sb_cycles"] + (k - n_pd)
+    dram["pd_down"] = dram["pd_down"] | (t_new - 1 >= enter)
     return dram
 
 

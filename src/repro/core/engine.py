@@ -9,6 +9,7 @@ Completion ring: RING > max access latency, indexed by absolute cycle % RING.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, Tuple
 
 import jax
@@ -21,6 +22,10 @@ from repro.core.params import (CLS_CPU, CLS_GPU, CLS_HWA, SimConfig,
 
 RING = 64
 NEG_T = -100_000
+# "no event" sentinel for the variable-step driver's next-event witnesses:
+# far beyond any simulated horizon, small enough that int32 arithmetic on
+# witness candidates can never wrap
+INF_T = 1 << 30
 
 # source_state keys added by the N-class requester model (golden digests
 # predate them; the digest tests whitelist exactly this tuple)
@@ -90,6 +95,28 @@ def lcg_step(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     x = x * jnp.uint32(1664525) + jnp.uint32(1013904223)
     u = (x >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
     return x, u
+
+
+def lcg_skip(x: jax.Array, k: jax.Array) -> jax.Array:
+    """Advance the LCG state by a traced number of steps in O(log k).
+
+    The per-step map f(x) = A·x + C is affine, so f^k is the affine map
+    obtained by binary exponentiation over k's bits — the closed form the
+    variable-step driver uses to keep skipped spans bit-identical to
+    ticking (each skipped cycle consumes its rng draws without observing
+    them). k: scalar int (>= 0; k = 0 is the identity). uint32 wrap-around
+    arithmetic throughout, exactly matching repeated `lcg_step`.
+    """
+    A, C = jnp.uint32(1664525), jnp.uint32(1013904223)
+    kk = k.astype(jnp.uint32)
+    acc_a, acc_c = jnp.uint32(1), jnp.uint32(0)
+    pow_a, pow_c = A, C
+    for i in range(32):                     # static: k fits in 32 bits
+        take = ((kk >> jnp.uint32(i)) & jnp.uint32(1)) == jnp.uint32(1)
+        acc_a, acc_c = (jnp.where(take, pow_a * acc_a, acc_a),
+                        jnp.where(take, pow_a * acc_c + pow_c, acc_c))
+        pow_a, pow_c = pow_a * pow_a, pow_a * pow_c + pow_c
+    return acc_a * x + acc_c
 
 
 # ---------------------------------------------------------------------------
@@ -288,6 +315,97 @@ def deadline_tick(cfg: SimConfig, pool: Dict[str, jax.Array],
     st["dl_met"] = st["dl_met"] + met.astype(jnp.int32)
     st["dl_missed"] = st["dl_missed"] + (boundary & ~met).astype(jnp.int32)
     st["period_done"] = jnp.where(boundary, 0, st["period_done"])
+    return st
+
+
+# ---------------------------------------------------------------------------
+# variable-step driver witnesses (ROADMAP "Variable-step driver contract").
+#
+# Each witness returns the earliest cycle > t at which the corresponding
+# per-cycle hook could do anything beyond the closed-form accruals that
+# `skip_sources`/`energy.skip_accrue` replay. Witnesses are evaluated on
+# POST-cycle-t state and may be conservative-early (returning a cycle at
+# which nothing happens is always safe — processing it is ticked-identical);
+# they must never be late. INF_T means "no event from this component".
+# ---------------------------------------------------------------------------
+
+def next_source_event(cfg: SimConfig, pool: Dict[str, jax.Array],
+                      st: Dict[str, Any], active: jax.Array, t: jax.Array
+                      ) -> jax.Array:
+    """Earliest cycle > t at which `source_tick` could emit a request or
+    `deadline_tick` could settle a frame boundary, assuming no completion
+    or issue lands first (those are covered by separate witnesses — any of
+    them firing ends the span before this witness is trusted past it)."""
+    S = cfg.n_src
+    cls = pool["src_class"]
+    is_gpu = cls == CLS_GPU
+    is_hwa = cls == CLS_HWA
+    is_cpu = cls == CLS_CPU
+    mshr = jnp.where(is_gpu, cfg.gpu_mshr,
+                     jnp.where(is_hwa, cfg.hwa_mshr, cfg.cpu_mshr))
+    free = active & ~st["pend_valid"] & (st["outstanding"] < mshr)
+    INF = jnp.int32(INF_T)
+    t1 = t + 1
+    # GPU: wants every cycle while its pending register is free
+    w_gpu = jnp.where(jnp.any(free & is_gpu), t1, INF)
+    # CPU: next inter-miss crossing. `source_tick` adds ipc then compares,
+    # so the crossing cycle is t + ceil((ipm - acc)/ipc); floor(..) is the
+    # conservative-early form (never late: floor <= ceil, and f32 rounding
+    # on these integer-grid values is well under one whole step). Batch
+    # accrual of k*ipc is bit-exact only for power-of-two ipc, so any other
+    # ipc pins the witness at t+1 (trace-time check — ipc is static).
+    can_run = free & is_cpu
+    ipc = float(cfg.cpu_ipc)
+    if ipc > 0.0 and math.log2(ipc).is_integer():
+        kf = (pool["inst_per_miss"] - st["insts_acc"]) / jnp.float32(ipc)
+        k = jnp.maximum(jnp.floor(kf).astype(jnp.int32), 1)
+        w_cpu = jnp.min(jnp.where(can_run, t + k, INF))
+    else:
+        w_cpu = jnp.where(jnp.any(can_run), t1, INF)
+    # HWA: the current frame's jittered release point (clamped below by t+1
+    # — if already released and still wanting, the event is immediate)
+    period = jnp.maximum(pool["dl_period"], 1)
+    frame = t1 // period
+    rel = frame * period + frame_release_offset(S, frame, pool["dl_jitter"])
+    demand = st["period_done"] + st["outstanding"] < pool["dl_reqs"]
+    hwa_ok = free & is_hwa & demand & (pool["dl_period"] > 0)
+    w_hwa = jnp.min(jnp.where(hwa_ok, jnp.maximum(rel, t1), INF))
+    # frame boundary: `deadline_tick` settles every deadline source in the
+    # pool at its boundary regardless of `active` (it has no active mask)
+    has_dl = pool["dl_period"] > 0
+    w_bnd = jnp.min(jnp.where(has_dl, (t // period + 1) * period, INF))
+    return jnp.minimum(jnp.minimum(w_gpu, w_cpu), jnp.minimum(w_hwa, w_bnd))
+
+
+def next_completion(dram: Dict[str, Any], t: jax.Array) -> jax.Array:
+    """Earliest cycle > t whose completion-ring slot holds any request.
+
+    Every in-flight request lands within RING cycles of issue, so the ring
+    fully describes pending completions."""
+    pend = jnp.any(dram["ring"] > 0, axis=1)                 # (RING,)
+    slots = jnp.arange(RING, dtype=jnp.int32)
+    dt = jnp.mod(slots - (t + 1), RING)                      # 0..RING-1
+    return jnp.min(jnp.where(pend, t + 1 + dt, jnp.int32(INF_T)))
+
+
+def skip_sources(cfg: SimConfig, pool: Dict[str, jax.Array],
+                 st: Dict[str, Any], active: jax.Array, k: jax.Array
+                 ) -> Dict[str, Any]:
+    """Replay k skipped (event-free) cycles of `source_tick` in closed form:
+    the two unconditional rng draws per cycle and the CPU instruction
+    accrual. Everything else is frozen by the witness contract (no source
+    wants, no completions, no boundaries inside the span)."""
+    st = dict(st)
+    st["rng"] = lcg_skip(st["rng"], 2 * k)
+    cls = pool["src_class"]
+    mshr = jnp.where(cls == CLS_GPU, cfg.gpu_mshr,
+                     jnp.where(cls == CLS_HWA, cfg.hwa_mshr, cfg.cpu_mshr))
+    can_run = active & (cls == CLS_CPU) & (st["outstanding"] < mshr) \
+        & ~st["pend_valid"]
+    add = jnp.where(can_run, k.astype(jnp.float32) * jnp.float32(cfg.cpu_ipc),
+                    jnp.float32(0.0))
+    st["insts_acc"] = st["insts_acc"] + add
+    st["insts_done"] = st["insts_done"] + add
     return st
 
 

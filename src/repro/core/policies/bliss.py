@@ -57,3 +57,9 @@ class BLISS(CentralizedPolicy):
         buf["blacklist"] = buf["blacklist"] | hit
         buf["pri_src"] = (~buf["blacklist"]).astype(jnp.int32) * POL_BIT
         return buf
+
+    def next_boundary(self, cfg, pool, st, buf, t):
+        # the streak machine lives entirely in on_issue (issues are
+        # witnessed); only the interval clear is time-driven
+        return jnp.int32((t // cfg.bliss_clear_interval + 1)
+                         * cfg.bliss_clear_interval)

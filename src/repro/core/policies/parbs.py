@@ -3,7 +3,10 @@ requests per (source, bank), serve marked batches with shortest-job-first
 source ranking before anything unmarked.
 
 The seed implementation re-ran an O(C·E log E) CAM sort plus an SJF argsort
-every cycle. Both are gone from the hot loop:
+every cycle; PR 2 moved them behind a data-dependent boundary cond. That
+cond was the last batched-predicate residue on the stacked path — under
+`vmap` it degrades to `select`, inlining both branches every cycle. This
+version needs neither cond nor sort (the amortized-rank form):
 
   * `grank` — each entry's age rank within its (source, bank) group — is
     maintained incrementally. Births are strictly increasing per source
@@ -11,32 +14,45 @@ every cycle. Both are gone from the hot loop:
     group: a new entry's rank is just the group's current population, and
     an issue decrements the rank of its younger group-mates. Remarking
     becomes the elementwise test `valid & (grank < parbs_cap)`.
-  * remarking itself runs in `pre_tick` as a plain elementwise select — no
-    cond needed once the sort is gone;
-  * the SJF ranking of `marked_left` is recomputed in `boundary_tick`
-    behind a cond over (S,)-shaped state only, firing when the counts
-    changed: after a marked issue (tracked by `pend_dec`, consumed here so
-    `marked_left` keeps the exact recompute-at-tick timing) or when a
-    batch is exhausted and a new one forms (`remarked`).
+  * `msub` — the would-be-marked population per source, i.e. the size of
+    `valid & (grank < cap)` — is maintained incrementally too (admit adds
+    below-cap entries; an issue removes the entry and promotes at most one
+    below-cap group-mate per channel), so batch re-formation assigns
+    `marked_left` from a counter instead of a (C, E, S) recount.
+  * the SJF priority is a pairwise stable rank of the (S,) `marked_left`
+    vector — O(S^2) elementwise compares, no sort primitive — cheap enough
+    to recompute unconditionally in `pre_tick`. Between batch events
+    `marked_left` is constant, so the recompute is a fixed point and the
+    cached `pri_src` stays bit-identical to the cond-gated original.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from repro.core import engine, policy
-from repro.core.schedulers import (CentralizedPolicy, POL_BIT, RANK_SHIFT,
-                                   rank_pos)
+from repro.core.schedulers import CentralizedPolicy, POL_BIT, RANK_SHIFT
+
+
+def pairwise_rank(key: jnp.ndarray) -> jnp.ndarray:
+    """Stable ascending rank (0 = smallest, ties broken by index) as an
+    O(S^2) compare-and-sum — matches `rank_pos` (argsort∘argsort) exactly
+    without a sort primitive, so it may run in the per-cycle jaxpr."""
+    lt = key[None, :] < key[:, None]
+    idx = jnp.arange(key.shape[0])
+    tie = (key[None, :] == key[:, None]) & (idx[None, :] < idx[:, None])
+    return jnp.sum(lt | tie, axis=1).astype(jnp.int32)
 
 
 @policy.register
 class PARBS(CentralizedPolicy):
     name = "parbs"
-    boundary_keys = ("marked_left", "pend_dec", "pri_src")
-    # stacked schema: (C, E) grank + (S,) batch counters + scalar remarked.
-    # Beyond the boundary keys, on_admit seeds grank, pre_tick re-marks
-    # (marked/remarked), and on_issue shifts grank / defers the decrement.
-    stacked_tick_keys = boundary_keys + ("grank", "marked", "remarked")
-    stacked_issue_keys = ("grank", "pend_dec")
+    boundary_keys = ()
+    # stacked schema: (C, E) grank + (S,) batch counters. on_admit seeds
+    # grank/msub, pre_tick re-marks and ranks, on_issue shifts grank /
+    # settles msub / defers the marked_left decrement.
+    stacked_tick_keys = ("marked_left", "pend_dec", "pri_src", "grank",
+                         "marked", "msub")
+    stacked_issue_keys = ("grank", "pend_dec", "msub")
 
     def extra_state(self, cfg):
         C, E, S = cfg.n_channels, cfg.buf_entries, cfg.n_src
@@ -45,7 +61,7 @@ class PARBS(CentralizedPolicy):
             "grank": jnp.zeros((C, E), jnp.int32),
             "pend_dec": jnp.zeros((S,), jnp.int32),
             "pri_src": jnp.zeros((S,), jnp.int32),
-            "remarked": jnp.zeros((), bool),
+            "msub": jnp.zeros((S,), jnp.int32),
         }
 
     def on_admit(self, cfg, pool, st, buf, do, slot, src, t):
@@ -58,41 +74,27 @@ class PARBS(CentralizedPolicy):
             (buf["bank"] == bank[:, None])
         rank = jnp.sum(grp, axis=1).astype(jnp.int32) - 1
         buf["grank"] = engine.masked_set(buf["grank"], slot, rank, do)
+        buf["msub"] = engine.accum_by_index(
+            buf["msub"], src, 1, do & (rank < cfg.parbs_cap))
         return buf
 
     def pre_tick(self, cfg, pool, st, buf, t):
-        # re-mark when no marked requests remain: with grank maintained
-        # incrementally this is a plain elementwise select, run every cycle
         buf = dict(buf)
+        S = cfg.n_src
+        # apply the decrements deferred by on_issue (keeps the seed's
+        # recompute-at-tick timing exactly), then re-mark when no marked
+        # requests remain — `msub` is the recount, already maintained
+        buf["marked_left"] = buf["marked_left"] - buf["pend_dec"]
+        buf["pend_dec"] = jnp.zeros_like(buf["pend_dec"])
         any_marked = jnp.any(buf["valid"] & buf["marked"])
         buf["marked"] = jnp.where(any_marked, buf["marked"],
                                   buf["valid"] & (buf["grank"]
                                                   < cfg.parbs_cap))
-        buf["remarked"] = ~any_marked
-        return buf
-
-    def boundary_pred(self, cfg, pool, st, buf, t):
-        # fire on any marked-count change: a marked issue last cycle, or a
-        # fresh re-mark. Data-dependent, so under vmap this degrades to
-        # select — but the branch touches only (S,) state and the sort
-        # stays out of the per-cycle jaxpr.
-        return buf["remarked"] | jnp.any(buf["pend_dec"] != 0)
-
-    def boundary_tick(self, cfg, pool, st, buf, t):
-        buf = dict(buf)
-        S = cfg.n_src
-        # re-mark: recount from scratch (ground truth for the new batch);
-        # otherwise apply the deferred per-issue decrements. One-hot
-        # compare-and-reduce, not a scatter: XLA:CPU executes the dense
-        # reduction an order of magnitude faster inside the scan.
-        onehot = (buf["src"][..., None] == jnp.arange(S)) & \
-            (buf["marked"] & buf["valid"])[..., None]       # (C, E, S)
-        cnt = jnp.sum(onehot, axis=(0, 1)).astype(jnp.int32)
-        buf["marked_left"] = jnp.where(buf["remarked"], cnt,
-                                       buf["marked_left"] - buf["pend_dec"])
-        buf["pend_dec"] = jnp.zeros_like(buf["pend_dec"])
-        # shortest-job ranking: fewest marked = best
-        rank = rank_pos(buf["marked_left"])
+        buf["marked_left"] = jnp.where(any_marked, buf["marked_left"],
+                                       buf["msub"])
+        # shortest-job ranking: fewest marked = best. Sort-free and a fixed
+        # point between batch events, so it runs unconditionally.
+        rank = pairwise_rank(buf["marked_left"])
         buf["pri_src"] = (S - rank).astype(jnp.int32) << RANK_SHIFT
         return buf
 
@@ -103,12 +105,19 @@ class PARBS(CentralizedPolicy):
         bank = buf["bank"][cidx, safe]
         birth = buf["birth"][cidx, safe]
         was_marked = buf["marked"][cidx, safe]
-        # younger group-mates move up one rank
+        was_below = buf["grank"][cidx, safe] < cfg.parbs_cap
+        # younger group-mates move up one rank; any mate sitting exactly at
+        # the cap (at most one per channel — ranks are distinct in a group)
+        # enters the would-be-marked set, the issued entry leaves it
         younger = buf["valid"] & (buf["src"] == src[:, None]) & \
             (buf["bank"] == bank[:, None]) & \
             (buf["birth"] > birth[:, None]) & do[:, None]
+        at_cap = jnp.sum(younger & (buf["grank"] == cfg.parbs_cap),
+                         axis=1).astype(jnp.int32)
         buf["grank"] = buf["grank"] - younger.astype(jnp.int32)
-        # defer the marked_left decrement to the next boundary_tick so the
+        buf["msub"] = engine.accum_by_index(
+            buf["msub"], src, at_cap - was_below.astype(jnp.int32), do)
+        # defer the marked_left decrement to the next pre_tick so the
         # count keeps the seed's recompute-at-tick timing exactly
         buf["pend_dec"] = engine.accum_by_index(
             buf["pend_dec"], src, 1, do & was_marked)
@@ -117,3 +126,12 @@ class PARBS(CentralizedPolicy):
     def score(self, cfg, pool, buf, is_hit, t):
         return buf["marked"].astype(jnp.int32) * POL_BIT + \
             super().score(cfg, pool, buf, is_hit, t)
+
+    def next_boundary(self, cfg, pool, st, buf, t):
+        # pre_tick mutates state next cycle iff deferred decrements are
+        # pending or a fresh batch would form; otherwise every term it
+        # writes is a fixed point and the span may skip it
+        pend = jnp.any(buf["pend_dec"] != 0)
+        reform = ~jnp.any(buf["valid"] & buf["marked"]) & \
+            jnp.any(buf["valid"])
+        return jnp.where(pend | reform, t + 1, jnp.int32(engine.INF_T))

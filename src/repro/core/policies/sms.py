@@ -32,6 +32,13 @@ class SMS:
     def select(self, cfg, pool, st, sched, dram, t):
         return sms_lib.stage3_issue(cfg, st, sched, dram, t)
 
+    # -- variable-step driver witness (see `policy.make_skip_step`) ---------
+    def next_event(self, cfg, pool, st, sched, dram, t):
+        return sms_lib.next_stage_event(cfg, st, sched, dram, t)
+
+    def on_skip(self, cfg, sched, k):
+        return sms_lib.skip_cycles(sched, k)
+
 
 @policy.register
 class SMSDash(SMS):

@@ -97,3 +97,25 @@ class SquashPrio(CentralizedPolicy):
         # request admits ahead of anything merely older
         return st["pend_birth"] - jnp.where(buf["sq_urgent"],
                                             jnp.int32(1 << 20), 0)
+
+    def next_boundary(self, cfg, pool, st, buf, t):
+        # `policy_tick` runs every cycle, so a span may only skip cycles
+        # where its writes are fixed points: between epoch draws, urgency is
+        # monotone within a frame (`period_done`/`remaining` are frozen
+        # until a witnessed completion or frame boundary while the pace RHS
+        # grows with phase), so the only time-driven change is the first
+        # phase at which a currently-non-urgent deadline source flips on.
+        nb = jnp.int32((t // cfg.squash_epoch + 1) * cfg.squash_epoch)
+        is_accel = (pool["src_class"] == CLS_HWA) & (pool["dl_period"] > 0)
+        period = jnp.maximum(pool["dl_period"], 1)
+        reqs = jnp.maximum(pool["dl_reqs"], 1)
+        remaining = jnp.maximum(pool["dl_reqs"] - st["period_done"], 0)
+        # smallest integer phase with done*period < (phase + lead)*reqs
+        phase_on = jnp.floor_divide(
+            st["period_done"] * pool["dl_period"] - cfg.squash_lead * reqs,
+            reqs) + 1
+        tau = (t - jnp.mod(t, period)) + phase_on
+        cand = is_accel & (remaining > 0) & ~buf["sq_urgent"]
+        w_flip = jnp.min(jnp.where(cand, jnp.maximum(tau, t + 1),
+                                   jnp.int32(engine.INF_T)))
+        return jnp.minimum(nb, w_flip)

@@ -35,6 +35,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
 
+import jax.numpy as jnp
+
 from repro.core import energy, engine
 from repro.core.params import SimConfig
 
@@ -176,3 +178,37 @@ def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
         return (st, sched, dram), None
 
     return step
+
+
+def make_skip_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
+    """Variable-step body: process cycle t fully, then jump to the next
+    event (ROADMAP "Variable-step driver contract").
+
+    Returns None when `pol` exposes no `next_event` witness — the driver
+    then falls back to the ticked scan. The body runs the ordinary ticked
+    `make_step` for cycle t, asks the engine + policy witnesses for the
+    earliest cycle > t at which anything could happen, and replays the
+    skipped span's closed-form accruals (source rng/instruction progress,
+    background energy) in O(1). Hooks never observe the step size: they
+    still see every processed cycle exactly as the ticked driver would.
+    """
+    if not hasattr(pol, "next_event"):
+        return None
+    step = make_step(cfg, pol, pool, active)
+    on_skip = getattr(pol, "on_skip", None)
+
+    def skip_body(carry, t, t_end):
+        carry, _ = step(carry, t)
+        st, sched, dram = carry
+        te = engine.next_source_event(cfg, pool, st, active, t)
+        te = jnp.minimum(te, engine.next_completion(dram, t))
+        te = jnp.minimum(te, pol.next_event(cfg, pool, st, sched, dram, t))
+        t_new = jnp.minimum(te, t_end)
+        k = t_new - t - 1                       # skipped cycles, >= 0
+        st = engine.skip_sources(cfg, pool, st, active, k)
+        dram = energy.skip_accrue(cfg, dram, t, t_new)
+        if on_skip is not None:
+            sched = on_skip(cfg, sched, k)
+        return (st, sched, dram), t_new
+
+    return skip_body

@@ -204,6 +204,26 @@ class CentralizedPolicy:
         """(S,) admission ordering key, lowest first (default: oldest)."""
         return st["pend_birth"]
 
+    def next_boundary(self, cfg: SimConfig, pool, st, buf, t):
+        """Scalar: earliest cycle > t at which `boundary_pred` could fire or
+        any other per-cycle policy state could change in a way the generic
+        witnesses don't cover (e.g. a t-dependent urgency flip). None = no
+        boundary machinery. Early is safe, late is a correctness bug (see
+        ROADMAP "Variable-step driver contract")."""
+        return None
+
+    # -- variable-step driver witness (see `policy.make_skip_step`) ---------
+    def next_event(self, cfg: SimConfig, pool, st, buf, dram, t):
+        """Earliest cycle > t at which this policy's half of the cycle could
+        do anything: admit a pending request, issue a buffered one, or run
+        boundary maintenance. Evaluated on post-cycle-t state."""
+        te = next_admission(cfg, pool, st, buf, t)
+        te = jnp.minimum(te, next_issue_ready(cfg, buf, dram, t))
+        nb = self.next_boundary(cfg, pool, st, buf, t)
+        if nb is not None:
+            te = jnp.minimum(te, nb)
+        return te
+
     # -- MemoryPolicy protocol ---------------------------------------------
     def configure(self, cfg: SimConfig) -> SimConfig:
         return cfg
@@ -285,6 +305,52 @@ def clear_picked(cfg: SimConfig, pool, buf, do, pick, src):
     buf["gpu_occ"] = buf["gpu_occ"] - \
         (do & pool["is_gpu"][src]).astype(jnp.int32)
     return buf
+
+
+# ---------------------------------------------------------------------------
+# variable-step witnesses for the centralized substrate (conservative-early;
+# see ROADMAP "Variable-step driver contract"). Both are evaluated on
+# post-cycle state; any state they read is frozen until one of the family of
+# witnesses fires, which is what makes the returned times trustworthy.
+# ---------------------------------------------------------------------------
+
+def next_admission(cfg: SimConfig, pool, st, buf, t):
+    """t+1 if any pending request could be admitted next cycle, else INF.
+
+    Admissibility can only change via events other witnesses already cover
+    (a new pending request = source event; a freed slot or GPU-occupancy
+    drop = issue event), so a currently-blocked pending register stays
+    blocked for the whole span."""
+    ch = engine.channel_of(cfg, st["pend_bank"])                 # (S,)
+    gpu_ok = buf["gpu_occ"] < cfg.gpu_cap                        # (C,)
+    has_free = ~jnp.all(buf["valid"], axis=1)                    # (C,)
+    ok = st["pend_valid"] & has_free[ch] & \
+        (gpu_ok[ch] | ~pool["is_gpu"])
+    return jnp.where(jnp.any(ok), t + 1, jnp.int32(engine.INF_T))
+
+
+def next_issue_ready(cfg: SimConfig, buf, dram, t):
+    """Earliest cycle > t at which any buffered entry becomes issue-eligible.
+
+    Inverts `engine.eligibility`'s three timing gates per entry — bank
+    ready, tFAW window, bus ready — whose inputs (bank_free/act_ring/
+    bus_free/open_row) are all frozen while no issue lands. Every policy's
+    score is non-negative for eligible entries, so first-eligibility time
+    is exactly first-issue time (and if a future policy ever suppressed an
+    eligible entry, an early witness merely processes a no-op cycle)."""
+    tm = cfg.timing
+    take = lambda a: jnp.take_along_axis(a, buf["bank"], 1)      # (C, E)
+    openv = take(dram["open_valid"])
+    is_hit = openv & (take(dram["open_row"]) == buf["row"])
+    lat = jnp.where(is_hit, tm.lat_hit,
+                    jnp.where(openv, tm.lat_conflict, tm.lat_closed)
+                    ).astype(jnp.int32)
+    faw_ready = jnp.min(dram["act_ring"], axis=1)[:, None] + tm.t_faw
+    tau = jnp.maximum(take(dram["bank_free"]),
+                      jnp.where(is_hit, engine.NEG_T, faw_ready))
+    tau = jnp.maximum(tau, dram["bus_free"][:, None] - lat)
+    tau = jnp.maximum(tau, t + 1)
+    return jnp.min(jnp.where(buf["valid"], tau, jnp.int32(engine.INF_T)))
 
 
 # ---------------------------------------------------------------------------
@@ -400,3 +466,47 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
         return (st, buf, dram), None
 
     return step
+
+
+def make_stacked_skip_step(cfg: SimConfig, pols, pool, active):
+    """Variable-step body for the stacked family (see `policy.make_skip_step`
+    for the single-policy contract).
+
+    All P slices share one cycle counter, so a span ends at the MINIMUM
+    witness across slices — every slice is processed at every event any
+    slice has, which keeps each slice bit-identical to its ticked run (extra
+    processed cycles are no-ops by the conservative-early rule) at the cost
+    of a lower skip ratio than per-policy execution. The shared witnesses
+    (engine sources/completions, admission, issue readiness) vmap over P —
+    computing them per slice would multiply the dominant witness cost by
+    the family size; only the cheap policy-specific `next_boundary`
+    dispatches per slice at trace time like the other hooks.
+    """
+    if not all(hasattr(p, "next_event") for p in pols):
+        return None
+    step = make_stacked_step(cfg, pols, pool, active)
+    vP = jax.vmap
+
+    def skip_body(carry, t, t_end):
+        carry, _ = step(carry, t)
+        st, buf, dram = carry
+        te = jnp.min(vP(lambda s: engine.next_source_event(
+            cfg, pool, s, active, t))(st))
+        te = jnp.minimum(te, jnp.min(vP(
+            lambda d: engine.next_completion(d, t))(dram)))
+        te = jnp.minimum(te, jnp.min(vP(
+            lambda s, b: next_admission(cfg, pool, s, b, t))(st, buf)))
+        te = jnp.minimum(te, jnp.min(vP(
+            lambda b, d: next_issue_ready(cfg, b, d, t))(buf, dram)))
+        for i, p in enumerate(pols):
+            nb = p.next_boundary(cfg, pool, _slice_tree(st, i),
+                                 _slice_tree(buf, i), t)
+            if nb is not None:
+                te = jnp.minimum(te, nb)
+        t_new = jnp.minimum(te, t_end)
+        k = t_new - t - 1
+        st = vP(lambda s: engine.skip_sources(cfg, pool, s, active, k))(st)
+        dram = vP(lambda d: energy.skip_accrue(cfg, d, t, t_new))(dram)
+        return (st, buf, dram), t_new
+
+    return skip_body

@@ -29,7 +29,7 @@ _SNAP_KEYS = ("insts_done", "emitted", "completed", "sum_lat", "dl_met",
 _DRAM_SNAP = ("hits", "issued")
 # energy accumulators are delta-measured like the service stats; present in
 # dram_state only when cfg.energy_enabled (checked against the live tree)
-_ENERGY_SNAP = ("e_act", "e_rw", "e_bg", "e_wake", "pd_cycles")
+_ENERGY_SNAP = ("e_act", "e_rw", "sb_cycles", "e_wake", "pd_cycles")
 # QoS latency histogram, present only when cfg.qos_enabled
 _QOS_SNAP = ("lat_hist",)
 # policy QoS counters surfaced from scheduler state when present (the
@@ -61,14 +61,43 @@ def _init(cfg: SimConfig, policy: str):
                       engine.dram_state(cfg))
 
 
-def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
-                      ) -> Dict[str, jax.Array]:
-    """Warmup scan, stat snapshot, measured scan, delta metrics.
+def _run_cycles(step, skip_body, carry, t0: int, t1: int, unroll: int):
+    """Run cycles [t0, t1) — the ONE driver loop every `simulate*` variant
+    routes through.
+
+    Ticked mode (skip_body None): the chunked `lax.scan` over every cycle.
+    Skipping mode: a `lax.while_loop` whose body processes one cycle and
+    jumps `t` to the next-event witness (clamped to t1, so snapshot
+    boundaries land exactly where the ticked driver takes them). Under
+    `vmap` the while_loop batches per element — finished workloads freeze
+    while stragglers run on — so the vmap/stacked structure is unchanged.
+
+    Returns (carry, steps): steps counts processed cycles (== t1 - t0 when
+    ticked, a traced scalar when skipping).
+    """
+    if skip_body is None:
+        carry, _ = jax.lax.scan(step, carry, jnp.arange(t0, t1),
+                                unroll=unroll)
+        return carry, jnp.int32(t1 - t0)
+
+    def body(state):
+        carry, t, n = state
+        carry, t_new = skip_body(carry, t, jnp.int32(t1))
+        return carry, t_new, n + 1
+
+    carry, _, steps = jax.lax.while_loop(
+        lambda s: s[1] < t1, body, (carry, jnp.int32(t0), jnp.int32(0)))
+    return carry, steps
+
+
+def _scan_and_measure(cfg: SimConfig, step, skip_body, carry, n_cycles: int,
+                      warmup: int, unroll: int) -> Dict[str, jax.Array]:
+    """Warmup run, stat snapshot, measured run, delta metrics.
 
     Generic over the carry's leading axes: works for the per-policy step
     ((S,)-shaped stats) and the stacked step ((P, S)-shaped stats) alike.
     """
-    carry, _ = jax.lax.scan(step, carry, jnp.arange(warmup), unroll=unroll)
+    carry, _ = _run_cycles(step, skip_body, carry, 0, warmup, unroll)
     st_w, sched_w, dram_w = carry
     energy_on = all(k in dram_w for k in _ENERGY_SNAP)
     qos_on = all(k in dram_w for k in _QOS_SNAP)
@@ -79,9 +108,8 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
     if qos_on:
         snap.update({k: dram_w[k] for k in _QOS_SNAP})
     sched_snap = {k: sched_w[k] for k in _SCHED_SNAP if k in sched_w}
-    carry, _ = jax.lax.scan(step, carry,
-                            jnp.arange(warmup, warmup + n_cycles),
-                            unroll=unroll)
+    carry, steps = _run_cycles(step, skip_body, carry, warmup,
+                               warmup + n_cycles, unroll)
     st_f, sched_f, dram_f = carry
 
     cyc = jnp.float32(n_cycles)
@@ -102,6 +130,12 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
         "dl_met": d("dl_met"),
         "dl_missed": d("dl_missed"),
         "frames_released": d("frames_released"),
+        # processed cycles in the measured window: == n_cycles when ticked,
+        # fewer when the variable-step driver skips idle spans (the skip
+        # ratio is 1 - sim_steps/n_cycles). A driver property, not a
+        # simulation result — broadcast over any leading policy axis.
+        "sim_steps": jnp.broadcast_to(
+            steps, st_f["completed"].shape[:-1]).astype(jnp.float32),
     }
     if qos_on:
         out["lat_hist"] = d("lat_hist")               # (S, BINS) counts
@@ -111,11 +145,16 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
                 - sched_snap[k].astype(jnp.float32)
     if energy_on:
         # per-source dynamic energy stays (S,)-shaped for the CPU/GPU class
-        # breakdown; per-channel background collapses to totals
+        # breakdown; per-channel background collapses to totals. Background
+        # nJ derives from the integer cycle counters at metric time (the
+        # counters, not a float accumulator, are what the skipping driver
+        # can charge bit-identically in one add).
         out.update({
             "energy_act": d("e_act"),                 # (S,) ACT/PRE, nJ
             "energy_rw": d("e_rw"),                   # (S,) RD/WR bursts
-            "energy_bg": jnp.sum(d("e_bg"), -1),      # standby + power-down
+            "energy_bg": jnp.sum(d("sb_cycles"), -1)
+            * jnp.float32(cfg.energy_standby)
+            + jnp.sum(d("pd_cycles"), -1) * jnp.float32(cfg.energy_pd),
             "energy_wake": jnp.sum(d("e_wake"), -1),
             "pd_cycles": jnp.sum(d("pd_cycles"), -1),
         })
@@ -123,24 +162,34 @@ def _scan_and_measure(step, carry, n_cycles: int, warmup: int, unroll: int
 
 
 def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-             unroll: int, pool: Dict[str, jax.Array], active: jax.Array
-             ) -> Dict[str, jax.Array]:
+             unroll: int, skip: bool, pool: Dict[str, jax.Array],
+             active: jax.Array) -> Dict[str, jax.Array]:
     cfg, pol, carry = _init(cfg, policy)
     step = policy_api.make_step(cfg, pol, pool, active)
-    return _scan_and_measure(step, carry, n_cycles, warmup, unroll)
+    skip_body = policy_api.make_skip_step(cfg, pol, pool, active) \
+        if skip else None
+    return _scan_and_measure(cfg, step, skip_body, carry, n_cycles, warmup,
+                             unroll)
 
 
 # Per-cycle scan unroll factor. >1 trades trace size (compile time) for
 # fewer loop iterations; 1 is best for the compile-dominated sweeps.
 DEFAULT_UNROLL = 1
+# Variable-step driver default. skip=True jumps idle spans (bit-identical
+# to ticking — pinned by tests/test_event_skip.py) but pays a per-step
+# witness cost, so it is OPT-IN: a win on bursty/idle-heavy streams (the
+# `workloads.bursty_batch` family skips 60-97% of cycles), a pure loss on
+# saturated parity sweeps (skip ratio ~0.05). The standard benchmark
+# sweeps therefore tick; pass skip=True where traffic is idle-heavy.
+DEFAULT_SKIP = False
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
-                   donate_argnums=(5, 6))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5),
+                   donate_argnums=(6, 7))
 def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-               unroll: int, pool_batch, active_batch):
+               unroll: int, skip: bool, pool_batch, active_batch):
     return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup,
-                                          unroll, p, a)
+                                          unroll, skip, p, a)
                     )(pool_batch, active_batch)
 
 
@@ -168,8 +217,8 @@ def prepare_pool(pool: Dict[str, Any], shape, copy: bool = False
 def simulate_async(cfg: SimConfig, policy: str,
                    pool_batch: Dict[str, np.ndarray],
                    active_batch: np.ndarray, n_cycles: int = 20_000,
-                   warmup: int = 2_000,
-                   unroll: int = None) -> Dict[str, jax.Array]:
+                   warmup: int = 2_000, unroll: int = None,
+                   skip: bool = None) -> Dict[str, jax.Array]:
     """Dispatch a batch sim and return DEVICE arrays without blocking.
 
     JAX's async dispatch means the scan executes in the background; callers
@@ -188,15 +237,17 @@ def simulate_async(cfg: SimConfig, policy: str,
             "ignore", message="Some donated buffers were not usable")
         return _sim_batch(cfg, policy, n_cycles, warmup,
                           DEFAULT_UNROLL if unroll is None else unroll,
+                          DEFAULT_SKIP if skip is None else skip,
                           pool_batch, jnp.array(active_batch, copy=True))
 
 
 def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
              active_batch: np.ndarray, n_cycles: int = 20_000,
-             warmup: int = 2_000, unroll: int = None) -> Dict[str, np.ndarray]:
+             warmup: int = 2_000, unroll: int = None,
+             skip: bool = None) -> Dict[str, np.ndarray]:
     """pool_batch: dict of (W, S) arrays; active_batch: (W, S) bool."""
     out = simulate_async(cfg, policy, pool_batch, active_batch, n_cycles,
-                         warmup, unroll)
+                         warmup, unroll, skip)
     return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -229,30 +280,34 @@ def _init_stacked(cfg: SimConfig, policies: Tuple[str, ...]):
 
 
 def _one_sim_stacked(cfg: SimConfig, policies: Tuple[str, ...], n_cycles: int,
-                     warmup: int, unroll: int, pool: Dict[str, jax.Array],
-                     active: jax.Array) -> Dict[str, jax.Array]:
+                     warmup: int, unroll: int, skip: bool,
+                     pool: Dict[str, jax.Array], active: jax.Array
+                     ) -> Dict[str, jax.Array]:
     from repro.core import schedulers
 
     pols, carry = _init_stacked(cfg, policies)
     step = schedulers.make_stacked_step(cfg, pols, pool, active)
-    return _scan_and_measure(step, carry, n_cycles, warmup, unroll)
+    skip_body = schedulers.make_stacked_skip_step(cfg, pols, pool, active) \
+        if skip else None
+    return _scan_and_measure(cfg, step, skip_body, carry, n_cycles, warmup,
+                             unroll)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4),
-                   donate_argnums=(5, 6))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5),
+                   donate_argnums=(6, 7))
 def _sim_batch_stacked(cfg: SimConfig, policies: Tuple[str, ...],
-                       n_cycles: int, warmup: int, unroll: int,
+                       n_cycles: int, warmup: int, unroll: int, skip: bool,
                        pool_batch, active_batch):
     return jax.vmap(lambda p, a: _one_sim_stacked(cfg, policies, n_cycles,
-                                                  warmup, unroll, p, a)
+                                                  warmup, unroll, skip, p, a)
                     )(pool_batch, active_batch)
 
 
 def simulate_stacked_async(cfg: SimConfig, policies,
                            pool_batch: Dict[str, np.ndarray],
                            active_batch: np.ndarray, n_cycles: int = 20_000,
-                           warmup: int = 2_000,
-                           unroll: int = None) -> Dict[str, jax.Array]:
+                           warmup: int = 2_000, unroll: int = None,
+                           skip: bool = None) -> Dict[str, jax.Array]:
     """One dispatch for the whole stacked family; (W, P, S) device arrays.
 
     The per-policy trace+compile is amortized: the family shares a single
@@ -266,6 +321,7 @@ def simulate_stacked_async(cfg: SimConfig, policies,
             "ignore", message="Some donated buffers were not usable")
         return _sim_batch_stacked(cfg, tuple(policies), n_cycles, warmup,
                                   DEFAULT_UNROLL if unroll is None else unroll,
+                                  DEFAULT_SKIP if skip is None else skip,
                                   pool_batch, jnp.array(active_batch,
                                                         copy=True))
 
@@ -273,15 +329,17 @@ def simulate_stacked_async(cfg: SimConfig, policies,
 def simulate_stacked(cfg: SimConfig, policies,
                      pool_batch: Dict[str, np.ndarray],
                      active_batch: np.ndarray, n_cycles: int = 20_000,
-                     warmup: int = 2_000, unroll: int = None
-                     ) -> Dict[str, Dict[str, np.ndarray]]:
+                     warmup: int = 2_000, unroll: int = None,
+                     skip: bool = None) -> Dict[str, Dict[str, np.ndarray]]:
     """Per-policy (W, S) metrics for a stacked family, keyed by name.
 
     Results are bit-identical to per-policy `simulate` calls (pinned by
-    tests/test_stacked_vmap.py against the golden digests).
+    tests/test_stacked_vmap.py against the golden digests); `sim_steps` is
+    the exception — the stacked slices share one variable-step loop, so
+    they report the family's common step count, not the per-policy one.
     """
     out = simulate_stacked_async(cfg, policies, pool_batch, active_batch,
-                                 n_cycles, warmup, unroll)
+                                 n_cycles, warmup, unroll, skip)
     host = {k: np.asarray(v) for k, v in out.items()}
     return {pol: {k: v[:, i] for k, v in host.items()}
             for i, pol in enumerate(policies)}
@@ -289,7 +347,7 @@ def simulate_stacked(cfg: SimConfig, policies,
 
 def simulate_debug_stacked(cfg: SimConfig, policies,
                            pool: Dict[str, np.ndarray], active: np.ndarray,
-                           n_cycles: int = 2_000):
+                           n_cycles: int = 2_000, skip: bool = None):
     """Stacked-path analog of `simulate_debug` (no workload vmap).
 
     Returns {policy: (src_state, sched_state, dram_state)} numpy trees —
@@ -301,11 +359,15 @@ def simulate_debug_stacked(cfg: SimConfig, policies,
     policies = tuple(policies)
     pool = prepare_pool(pool, (cfg.n_src,))
     pols, carry = _init_stacked(cfg, policies)
-    step = schedulers.make_stacked_step(cfg, pols, pool, jnp.asarray(active))
+    active = jnp.asarray(active)
+    step = schedulers.make_stacked_step(cfg, pols, pool, active)
+    skip_body = schedulers.make_stacked_skip_step(cfg, pols, pool, active) \
+        if (DEFAULT_SKIP if skip is None else skip) else None
 
     @jax.jit
     def run(carry):
-        return jax.lax.scan(step, carry, jnp.arange(n_cycles))[0]
+        return _run_cycles(step, skip_body, carry, 0, n_cycles,
+                           DEFAULT_UNROLL)[0]
 
     st_f, sched_f, dram_f = run(carry)
     own = [set(p.init_state(cfg)) for p in pols]
@@ -317,7 +379,8 @@ def simulate_debug_stacked(cfg: SimConfig, policies,
 
 
 def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
-                   active: np.ndarray, n_cycles: int = 2_000):
+                   active: np.ndarray, n_cycles: int = 2_000,
+                   skip: bool = None):
     """Single-workload run returning the FINAL RAW STATE (invariant tests).
 
     pool: dict of (S,) arrays; active: (S,) bool.
@@ -325,11 +388,15 @@ def simulate_debug(cfg: SimConfig, policy: str, pool: Dict[str, np.ndarray],
     """
     pool = prepare_pool(pool, (cfg.n_src,))
     cfg, pol, carry = _init(cfg, policy)
-    step = policy_api.make_step(cfg, pol, pool, jnp.asarray(active))
+    active = jnp.asarray(active)
+    step = policy_api.make_step(cfg, pol, pool, active)
+    skip_body = policy_api.make_skip_step(cfg, pol, pool, active) \
+        if (DEFAULT_SKIP if skip is None else skip) else None
 
     @jax.jit
     def run(carry):
-        return jax.lax.scan(step, carry, jnp.arange(n_cycles))[0]
+        return _run_cycles(step, skip_body, carry, 0, n_cycles,
+                           DEFAULT_UNROLL)[0]
 
     st_f, sched_f, dram_f = run(carry)
     to_np = lambda t: jax.tree_util.tree_map(np.asarray, t)

@@ -240,3 +240,65 @@ def stage3_issue(cfg: SimConfig, st, sms, dram, t):
     sms["rr_bank"] = jnp.where(do, (pick + 1) % B,
                                sms["rr_bank"]).astype(jnp.int32)
     return st, sms, dram
+
+
+# ---------------------------------------------------------------------------
+# variable-step driver witnesses (ROADMAP "Variable-step driver contract")
+# ---------------------------------------------------------------------------
+
+def next_stage_event(cfg: SimConfig, st, sms, dram, t):
+    """Earliest cycle > t at which any of the three stages could act.
+
+    Conservative-early like the centralized witnesses: stage 1 fires while
+    any pending register has FIFO room; stage 2 fires while any channel is
+    draining or could start a batch, plus the age-threshold time at which a
+    quiet front batch becomes ready; stage 3 inverts the DRAM timing gates
+    on the per-bank DCS heads. The dash urgency pick needs no witness of
+    its own — it is recomputed from scratch on every processed cycle and
+    only consulted when a drain starts, which is itself witnessed.
+    """
+    tm = cfg.timing
+    INF = jnp.int32(engine.INF_T)
+    t1 = t + 1
+    # stage 1: a pending register with FIFO room pushes next cycle
+    ch = engine.channel_of(cfg, st["pend_bank"])             # (S,)
+    room = sms["f_len"][ch, jnp.arange(cfg.n_src)] < cfg.fifo_size
+    w1 = jnp.where(jnp.any(st["pend_valid"] & room), t1, INF)
+    # stage 2: an active drain moves (or settles) every cycle; an idle
+    # channel starts as soon as any batch is ready
+    _, ready = batch_info(cfg, sms, t)
+    idle = sms["drain_left"] <= 0
+    act = jnp.any(~idle) | jnp.any(idle & jnp.any(ready, axis=-1))
+    w2 = jnp.where(act, t1, INF)
+    # aging: a nonempty, not-yet-ready FIFO turns ready at head_birth + cap
+    head_birth = jnp.take_along_axis(
+        sms["f_birth"], sms["f_head"][..., None], axis=-1)[..., 0]  # (C,S)
+    w_age = jnp.min(jnp.where(
+        (sms["f_len"] > 0) & ~ready,
+        jnp.maximum(head_birth + cfg.batch_age_cap, t1), INF))
+    # stage 3: DCS head issue-eligibility times (inverts the three
+    # `engine.eligibility` gates; their inputs are frozen while no issue
+    # lands, which the witness itself guarantees for the span)
+    at_head = lambda a: jnp.take_along_axis(a, sms["d_head"][..., None],
+                                            2)[..., 0]        # (C,B)
+    row = at_head(sms["d_row"])
+    openv = dram["open_valid"]
+    is_hit = openv & (dram["open_row"] == row)
+    lat = jnp.where(is_hit, tm.lat_hit,
+                    jnp.where(openv, tm.lat_conflict, tm.lat_closed)
+                    ).astype(jnp.int32)
+    faw_ready = jnp.min(dram["act_ring"], axis=1)[:, None] + tm.t_faw
+    tau = jnp.maximum(dram["bank_free"],
+                      jnp.where(is_hit, engine.NEG_T, faw_ready))
+    tau = jnp.maximum(tau, dram["bus_free"][:, None] - lat)
+    tau = jnp.maximum(tau, t1)
+    w3 = jnp.min(jnp.where(sms["d_len"] > 0, tau, INF))
+    return jnp.minimum(jnp.minimum(w1, w2), jnp.minimum(w_age, w3))
+
+
+def skip_cycles(sms: Dict[str, Any], k) -> Dict[str, Any]:
+    """Replay k skipped cycles of stage-2 state in closed form: the batch
+    scheduler draws `rng2` once per cycle unconditionally."""
+    sms = dict(sms)
+    sms["rng2"] = engine.lcg_skip(sms["rng2"], k)
+    return sms

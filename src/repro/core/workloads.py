@@ -121,6 +121,84 @@ def pool_batch(cfg: SimConfig, workloads: Sequence[Workload]
     return pool, active
 
 
+# ---------------------------------------------------------------------------
+# idle-heavy / bursty archetypes: the traffic the variable-step driver is
+# for (ISSUE 7 / ROADMAP open item 2). Real heterogeneous streams are mostly
+# idle at the memory controller (Ausavarungnirun, arXiv:1803.06958; Mutlu et
+# al., arXiv:1805.06407): sparse CPU misses, long HWA frame gaps, duty-cycled
+# GPU bursts. Each archetype is one workload row; the measured skip ratio
+# per archetype is reported by `benchmarks/simspeed.py` (event_skip section).
+# ---------------------------------------------------------------------------
+
+BURSTY_ARCHETYPES: Tuple[str, ...] = (
+    "idle_cpu",      # low-intensity CPU mix, nothing else
+    "hwa_frames",    # long-period frame accelerators + a CPU trickle
+    "gpu_burst",     # duty-cycled streaming bursts (GPU-like HWA source)
+    "mixed_bursty",  # all three combined
+)
+
+
+def bursty_batch(cfg: SimConfig) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """(pool (W,S), active (W,S)) for the BURSTY_ARCHETYPES rows.
+
+    Duty-cycled GPU bursts are modeled as CLS_HWA sources (streaming RBL/BLP
+    with a large per-frame request budget): the frame machinery IS the duty
+    cycle — a dl_reqs burst every dl_period cycles, idle in between — which
+    a plain CLS_GPU source (always-wanting) cannot express. Requires at
+    least two HWA slots (cfg.n_hwa >= 2).
+    """
+    if cfg.n_hwa < 2:
+        raise ValueError("bursty_batch needs cfg.n_hwa >= 2 "
+                         f"(got {cfg.n_hwa})")
+    W, S = len(BURSTY_ARCHETYPES), cfg.n_src
+    mpki = np.zeros((W, S), np.float32)
+    rbl = np.zeros((W, S), np.float32)
+    blp = np.ones((W, S), np.int32)
+    is_gpu = np.zeros((W, S), bool)
+    src_class = np.zeros((W, S), np.int32)
+    dl_period = np.zeros((W, S), np.int32)
+    dl_reqs = np.zeros((W, S), np.int32)
+    dl_jitter = np.zeros((W, S), np.int32)
+    active = np.zeros((W, S), bool)
+
+    def cpu(w, i, m, r=0.6, bl=2):
+        mpki[w, i], rbl[w, i], blp[w, i] = m, r, bl
+        active[w, i] = True
+
+    def hwa(w, j, period, reqs, r, bl, jit):
+        hi = cfg.n_cpu + cfg.n_gpu + j
+        mpki[w, hi], rbl[w, hi], blp[w, hi] = 1000.0, r, bl
+        src_class[w, hi] = CLS_HWA
+        dl_period[w, hi], dl_reqs[w, hi] = period, reqs
+        dl_jitter[w, hi] = jit
+        active[w, hi] = True
+
+    for w, arch in enumerate(BURSTY_ARCHETYPES):
+        if arch == "idle_cpu":
+            # sparse misses: one every ~500-3300 instructions per core
+            for i, m in zip(range(cfg.n_cpu), (0.3, 0.6, 1.2, 2.0) * 4):
+                cpu(w, i, m)
+        elif arch == "hwa_frames":
+            cpu(w, 0, 0.5)
+            hwa(w, 0, 4000, 60, 0.85, 2, 128)
+            hwa(w, 1, 6000, 40, 0.90, 2, 256)
+        elif arch == "gpu_burst":
+            cpu(w, 0, 0.3)
+            # ~300-cycle burst every 3000 cycles at ~1 req/cycle drain
+            hwa(w, 0, 3000, 300, 0.92, 4, 0)
+        elif arch == "mixed_bursty":
+            for i, m in zip(range(min(cfg.n_cpu, 3)), (0.5, 1.0, 1.5)):
+                cpu(w, i, m)
+            hwa(w, 0, 5000, 50, 0.85, 2, 192)
+            hwa(w, 1, 2500, 200, 0.90, 4, 0)
+    pool = {"mpki": mpki,
+            "inst_per_miss": np.maximum(1000.0 / np.maximum(mpki, 1e-3), 1.0),
+            "rbl": rbl, "blp": blp, "is_gpu": is_gpu,
+            "src_class": src_class, "dl_period": dl_period,
+            "dl_reqs": dl_reqs, "dl_jitter": dl_jitter}
+    return pool, active
+
+
 def alone_batch(cfg: SimConfig) -> Tuple[Dict[str, np.ndarray], np.ndarray,
                                          Dict[str, int]]:
     """One single-source run per benchmark; returns index map name->row.

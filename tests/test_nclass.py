@@ -156,6 +156,10 @@ def test_stacked_parity_on_3class_pool():
     for pol in fam:
         solo = _run(cfg, pol, pool)
         for k in solo:
+            if k == "sim_steps":
+                # driver property: the stacked family shares ONE
+                # variable-step loop, so its step count is family-common
+                continue
             np.testing.assert_array_equal(
                 stacked[pol][k], solo[k], err_msg=f"{pol}:{k}")
 

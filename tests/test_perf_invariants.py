@@ -7,8 +7,9 @@ the trace:
   * sort primitives (argsort ranking, remark sorts) may appear ONLY inside
     `cond` branches of the per-cycle step for every centralized policy —
     never unconditionally;
-  * the ranked policies (atlas/parbs/tcm) actually HAVE their sorts behind
-    a cond (the check isn't vacuous);
+  * the ranked policies (atlas/tcm) actually HAVE their sorts behind a
+    cond (the check isn't vacuous), while PAR-BS — reformulated to the
+    amortized pairwise-rank form — has no sort primitive at all;
   * the scan carry holds only cycle-varying state: the read-only workload
     parameters `_pool`/`_active` are closed over, not carried;
   * the refactor is bit-identical: the golden digests for atlas/parbs/tcm
@@ -74,13 +75,23 @@ def test_no_unconditional_sorts_in_step(policy_name):
         f"per-cycle step — ranking belongs in boundary_tick behind cond")
 
 
-@pytest.mark.parametrize("policy_name", ["atlas", "parbs", "tcm"])
+@pytest.mark.parametrize("policy_name", ["atlas", "tcm"])
 def test_ranked_policies_sort_inside_cond(policy_name):
     """Non-vacuity: the ranked policies do sort, behind the boundary cond."""
     jx = _step_jaxpr(policy_name)
     gated = [p for p, in_cond in _walk_prims(jx.jaxpr)
              if p in SORT_PRIMS and in_cond]
     assert gated, f"{policy_name}: expected ranking sorts inside cond"
+
+
+def test_parbs_step_is_sort_free():
+    """PAR-BS batch-boundary residue fix: the amortized-rank form computes
+    source priority by pairwise comparison counts, so its step jaxpr has NO
+    sort primitive at all — gated or not — and no data-dependent cond is
+    left on the stacked path for it."""
+    jx = _step_jaxpr("parbs")
+    sorts = [p for p, _ in _walk_prims(jx.jaxpr) if p in SORT_PRIMS]
+    assert not sorts, f"parbs: {len(sorts)} sort op(s) — residue regressed"
 
 
 def test_energy_accounting_adds_no_sorts_or_scatters():

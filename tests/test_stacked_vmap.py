@@ -147,6 +147,11 @@ def test_stacked_metrics_match_per_policy_simulate():
     for pol in fam:
         ref = sim.simulate(CFG, pol, pool, active, n_cycles=600, warmup=100)
         for k in ref:
+            if k == "sim_steps":
+                # driver property, not a policy metric: the stacked family
+                # shares ONE loop, so its step count is the min over every
+                # slice's witnesses — not any single policy's own count
+                continue
             np.testing.assert_array_equal(
                 ref[k], stk[pol][k], err_msg=f"{pol}:{k}")
 
