@@ -6,7 +6,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed bench-qos
+.PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed bench-qos \
+	bench-dse
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -19,6 +20,7 @@ test:
 bench-smoke:
 	$(PY) -m benchmarks.simspeed --smoke \
 		$(if $(SMOKE_OUT),--summary-out $(SMOKE_OUT))
+	$(PY) -m benchmarks.fig_pareto --smoke
 
 bench-simspeed:
 	$(PY) -m benchmarks.simspeed
@@ -27,6 +29,11 @@ bench-simspeed:
 # latency, and class-masked fairness across every registry policy
 bench-qos:
 	$(PY) -m benchmarks.run --only qos
+
+# design-space exploration: the (policy x knob-variant) grid as ONE stacked
+# XLA program, scored into the energy/perf/area Pareto frontier
+bench-dse:
+	$(PY) -m benchmarks.fig_pareto
 
 ci: deps-dev test
 

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import metrics as met
+from repro.core import params
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
 from repro.core import workloads as wl
@@ -55,20 +56,33 @@ def resolved_config(cfg: SimConfig, policy: str) -> SimConfig:
     return policy_api.get(policy).configure(cfg)
 
 
+def resolved_knobs(cfg: SimConfig, policy: str) -> Dict[str, object]:
+    """Host-side view of the knob point the policy actually runs at (after
+    `configure_knobs` — e.g. sms_dash pins dash=True). Part of every cache
+    key: knob variants of one policy may never share a cache entry."""
+    rcfg = resolved_config(cfg, policy)
+    kn = policy_api.resolve_knobs(rcfg, policy_api.get(policy))
+    return {f: np.asarray(getattr(kn, f)).item()
+            for f in params.KNOB_FIELDS}
+
+
 def _key(cfg: SimConfig, policy: str, tag: str, n_cycles: int,
          warmup: int, seed: int, n_per_cat: int) -> str:
-    # hash the RESOLVED config: a variant policy (e.g. sms_dash) bakes its
-    # knobs in via `configure`, so it can never collide with its base under
-    # any cache-sharing scheme
-    blob = json.dumps([repr(resolved_config(cfg, policy)), policy, tag,
-                       n_cycles, warmup, seed, n_per_cat], sort_keys=True)
+    # hash the RESOLVED config AND knob point: a variant policy (e.g.
+    # sms_dash, whose configure_knobs pins dash=True) can never collide
+    # with its base under any cache-sharing scheme
+    blob = json.dumps([repr(resolved_config(cfg, policy)),
+                       sorted(resolved_knobs(cfg, policy).items()),
+                       policy, tag, n_cycles, warmup, seed, n_per_cat],
+                      sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
 def _alone_key(cfg: SimConfig, policy: str, n_cycles: int,
                warmup: int) -> str:
-    blob = json.dumps([repr(resolved_config(cfg, policy)), policy,
-                       n_cycles, warmup], sort_keys=True)
+    blob = json.dumps([repr(resolved_config(cfg, policy)),
+                       sorted(resolved_knobs(cfg, policy).items()),
+                       policy, n_cycles, warmup], sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
 
@@ -215,6 +229,116 @@ def run_policy(cfg: SimConfig, policy: str, workloads: Sequence[wl.Workload],
     """Alone-normalized per-workload metrics for one policy (cached)."""
     return run_sweep(cfg, [policy], workloads, n_cycles=n_cycles,
                      warmup=warmup, seed=seed, tag=tag, force=force)[policy]
+
+
+def _grid_key(cfg: SimConfig, policy: str, overrides: Dict, tag: str,
+              n_cycles: int, warmup: int, seed: int, n_wl: int) -> str:
+    blob = json.dumps([repr(resolved_config(cfg, policy)),
+                       sorted(resolved_knobs(cfg, policy).items()),
+                       policy, sorted(overrides.items()), tag,
+                       n_cycles, warmup, seed, n_wl],
+                      sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
+             n_cycles: int = 16_000, warmup: int = 2_000, seed: int = 7,
+             tag: str = "grid", force: bool = False) -> Dict[str, Dict]:
+    """Alone-normalized metrics for a (policy x knob-variant) grid (cached).
+
+    `specs` is a sequence of (policy, label, knob_overrides) triples;
+    overrides may mix value-like and period-like knobs. Uncached stackable
+    specs run as ONE stacked-grid dispatch (policy and knob variants share
+    the leading slice axis — one XLA program for the whole grid); the
+    non-stackable rest (the SMS family) groups per (policy, period
+    overrides) with value-knob variants on a vmapped knob axis — one
+    compiled program per group instead of one per point. Alone-baseline
+    rows ride the same batch, so every variant slice gets an alone
+    normalization measured at its own knob point.
+
+    Returns {label: result}, parallel to specs; labels must be unique.
+    """
+    specs = [(p, lab, dict(ov)) for p, lab, ov in specs]
+    labels = [lab for _, lab, _ in specs]
+    if len(set(labels)) != len(labels):
+        raise ValueError("duplicate run_grid labels")
+    apool, aactive, amap = wl.alone_batch(cfg)
+    n_alone = len(amap)
+    pool, active = wl.pool_batch(cfg, workloads)
+    batch_pool = {k: np.concatenate([apool[k], pool[k]]) for k in pool}
+    batch_active = np.concatenate([aactive, active])
+
+    results: Dict[str, Dict] = {}
+    todo = []
+    for polname, label, ov in specs:
+        key = _grid_key(cfg, polname, ov, tag, n_cycles, warmup, seed,
+                        len(workloads))
+        path = EXP_DIR / f"grid_{polname}_{key}.json"
+        if path.exists() and not force:
+            results[label] = json.loads(path.read_text())
+        else:
+            todo.append((polname, label, ov, path))
+
+    def _stackable(item):
+        per, _ = params.split_overrides(item[2])
+        return policy_api.is_stackable(item[0], cfg.replace(**per))
+
+    stacked_items = [it for it in todo if _stackable(it)]
+    singles = [it for it in todo if not _stackable(it)]
+    pending = []
+    if len(stacked_items) >= 2:
+        dev = sim.simulate_stacked_grid_async(
+            cfg, [(p, ov) for p, _, ov, _ in stacked_items],
+            batch_pool, batch_active, n_cycles, warmup)
+        box: Dict = {}
+        for idx, it in enumerate(stacked_items):
+            pending.append((it, _stacked_fetch(dev, idx, box)))
+    else:
+        singles = stacked_items + singles
+    by_group: Dict[tuple, list] = {}
+    for it in singles:
+        per, _ = params.split_overrides(it[2])
+        by_group.setdefault((it[0], tuple(sorted(per.items()))),
+                            []).append(it)
+    for (polname, per), items in by_group.items():
+        gcfg = cfg.replace(**dict(per))
+        points = [params.split_overrides(it[2])[1] for it in items]
+        dev = sim.simulate_grid_async(gcfg, polname, points, batch_pool,
+                                      batch_active, n_cycles, warmup)
+        box = {}
+        for idx, it in enumerate(items):
+            pending.append((it, _stacked_fetch(dev, idx, box)))
+
+    for (polname, label, ov, path), fetch in pending:
+        t0 = time.time()
+        m = fetch()
+        am = {k: v[:n_alone] for k, v in m.items()}
+        m = {k: v[n_alone:] for k, v in m.items()}
+        alone = wl.alone_perf_lookup(cfg, am, amap)
+        perf = sim.perf_vector(cfg, m, pool)
+        rows = [met.workload_metrics(cfg, w, perf[i], alone)
+                for i, w in enumerate(workloads)]
+        if "lat_hist" in m:
+            qb = met.qos_breakdown(cfg, m, pool)
+            for i, r in enumerate(rows):
+                r.update({k: float(v[i]) for k, v in qb.items()})
+        out = {
+            "policy": polname,
+            "label": label,
+            "overrides": ov,
+            "elapsed_s": round(time.time() - t0, 1),
+            "alone": alone,
+            "rows": rows,
+            "categories": [w.category for w in workloads],
+            "agg": met.aggregate(rows),
+            "by_category": met.by_category(workloads, rows),
+            "measured": {k: np.asarray(v).mean(0).tolist()
+                         for k, v in m.items()},
+        }
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(out, indent=1))
+        results[label] = out
+    return {lab: results[lab] for _, lab, _ in specs}
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

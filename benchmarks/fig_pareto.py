@@ -1,0 +1,235 @@
+"""Design-space exploration: the energy/perf/area Pareto frontier
+(`make bench-dse`).
+
+One `common.run_grid` call evaluates the whole design grid — every
+stackable centralized policy crossed with a shared set of knob variants
+rides a single stacked XLA program (policy and knob variants share the
+leading slice axis), and the SMS family sweeps its own knob grid on a
+vmapped knob axis. Each grid point is scored on four axes:
+
+  weighted speedup (max) / max slowdown (min) /
+  full-MC energy per request (min, via `power.full_mc_energy`) /
+  scheduler area (min, via `power.structure_cost`)
+
+and the non-dominated set is the Pareto frontier, optionally filtered by
+an ``--area-budget``. The §5.2 claim under reproduction: SMS knob points
+appear on the frontier and beat the best centralized policy on
+energy/request at a fraction of its scheduler area.
+
+A hillclimb pass (same hypothesis -> measure -> record loop as
+`repro.launch.hillclimb`) then perturbs the best SMS point one knob at a
+time toward the frontier, logging verdicts to experiments/dse/.
+
+``--smoke`` is the `make bench-smoke` gate: it asserts the >=24-point
+(policy x knob-variant) grid compiles as ONE stacked XLA program.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro import compat
+from repro.core import power
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+
+DSE_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dse"
+
+# shared knob variants for the centralized family (cross product with the
+# stackable registry = the stacked-grid slice axis)
+VARIANTS = (
+    ("base", {}),
+    ("cpu-lean", {"cpu_reserve": 0.25}),
+    ("cpu-rich", {"cpu_reserve": 0.75}),
+    ("pd-eager", {"energy_pd_idle": 16}),
+)
+
+# SMS knob grid: SJF probability x batch age cap x DASH preemption
+SMS_POINTS = [
+    {"sjf_prob": p, "batch_age_cap": c, "dash": d}
+    for p in (0.5, 0.9) for c in (100, 200) for d in (False, True)
+]
+
+# hillclimb refinements applied to the best SMS point (one knob per step)
+PLANS = [
+    ("pd-eager",
+     "Shorter power-down idle threshold (48->16) puts idle ranks down "
+     "sooner; predict background energy drops so energy/request falls "
+     "with flat weighted speedup.",
+     {"energy_pd_idle": 16}),
+    ("age-cap-up",
+     "A looser stage-1 age cap forms longer row-hit batches; predict "
+     "fewer ACT pulses per request (energy/request down) at a small "
+     "fairness cost.",
+     {"batch_age_cap": 300}),
+    ("sjf-strong",
+     "sjf_prob -> 1.0 always picks shortest-job CPU batches; predict "
+     "weighted speedup up with energy/request flat (paper: high p "
+     "favors CPU).",
+     {"sjf_prob": 1.0}),
+]
+
+
+def _point_score(cfg, res, n_cycles: int) -> Dict[str, float]:
+    """Collapse one grid point into the four Pareto axes."""
+    meas = res["measured"]
+    dyn = float(np.sum(meas["energy_act"]) + np.sum(meas["energy_rw"]))
+    bg = float(np.sum(meas["energy_bg"]) + np.sum(meas["energy_wake"]))
+    reqs = float(np.sum(meas["completed"]))
+    fe = power.full_mc_energy(cfg, res["policy"], dyn, bg, n_cycles, reqs)
+    return {
+        "policy": res["policy"],
+        "label": res["label"],
+        "overrides": res["overrides"],
+        "weighted_speedup": res["agg"]["weighted_speedup"],
+        "max_slowdown": res["agg"]["max_slowdown"],
+        "energy_per_request_nj": fe["energy_per_request_nj"],
+        "area": power.structure_cost(cfg, res["policy"])["area"],
+    }
+
+
+def _dominates(a: Dict, b: Dict) -> bool:
+    ge = (a["weighted_speedup"] >= b["weighted_speedup"] and
+          a["max_slowdown"] <= b["max_slowdown"] and
+          a["energy_per_request_nj"] <= b["energy_per_request_nj"] and
+          a["area"] <= b["area"])
+    gt = (a["weighted_speedup"] > b["weighted_speedup"] or
+          a["max_slowdown"] < b["max_slowdown"] or
+          a["energy_per_request_nj"] < b["energy_per_request_nj"] or
+          a["area"] < b["area"])
+    return ge and gt
+
+
+def pareto_frontier(points: List[Dict]) -> List[Dict]:
+    return [p for p in points
+            if not any(_dominates(q, p) for q in points if q is not p)]
+
+
+def _objective(pt: Dict) -> float:
+    # perf per nJ: what the hillclimb maximizes (both frontier axes move it)
+    return pt["weighted_speedup"] / pt["energy_per_request_nj"]
+
+
+def hillclimb(cfg, base_pt: Dict, wls, n_cycles: int, force: bool) -> Dict:
+    """Hypothesis -> measure -> record: refine the best SMS point."""
+    incumbent = dict(base_pt["overrides"])
+    best = base_pt
+    log = {"baseline": base_pt, "iterations": []}
+    for tag, hypothesis, step in PLANS:
+        cand = {**incumbent, **step}
+        res = common.run_grid(cfg, [("sms", f"hc_{tag}", cand)], wls,
+                              n_cycles=n_cycles, tag="dse_hc", force=force)
+        pt = _point_score(cfg, res[f"hc_{tag}"], n_cycles)
+        delta = (_objective(pt) / _objective(best) - 1.0) * 100.0
+        verdict = "confirmed" if delta > 1.0 else (
+            "partial" if delta > 0.0 else "refuted")
+        log["iterations"].append({
+            "tag": tag, "hypothesis": hypothesis, "overrides": cand,
+            "point": pt, "objective_delta_pct": delta, "verdict": verdict,
+        })
+        print(f"[dse/{tag}] ws/nJ {delta:+.1f}% -> {verdict}")
+        if delta > 0.0:
+            incumbent, best = cand, pt
+    log["best"] = best
+    DSE_DIR.mkdir(parents=True, exist_ok=True)
+    (DSE_DIR / "pareto_hillclimb.json").write_text(json.dumps(log, indent=1))
+    return log
+
+
+def main(n_per_cat: int = 3, n_cycles: int = 8_000, force: bool = False,
+         area_budget: float = None, smoke: bool = False):
+    t0 = time.time()
+    cfg = common.parity_config()
+    assert cfg.energy_enabled, "fig_pareto needs the energy subsystem on"
+    if smoke:
+        n_per_cat, n_cycles, force = 1, 400, True
+    warmup = min(2_000, n_cycles // 4)
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat)
+
+    stackable = sim.stackable_names(cfg)
+    specs = [(p, f"{p}@{vn}", ov)
+             for p in stackable for vn, ov in VARIANTS]
+    n_stacked = len(specs)
+    specs += [("sms", "sms@" + "_".join(f"{k}={v}" for k, v in pt.items()),
+               pt) for pt in SMS_POINTS]
+
+    jit0 = compat.jit_cache_size(sim._sim_batch_stacked_grid)
+    tag = "dse_smoke" if smoke else "dse"
+    res = common.run_grid(cfg, specs, wls, n_cycles=n_cycles, warmup=warmup,
+                          tag=tag, force=force)
+    stacked_programs = compat.jit_cache_size(sim._sim_batch_stacked_grid) \
+        - jit0
+
+    points = [_point_score(cfg, res[lab], n_cycles) for _, lab, _ in specs]
+    if smoke:
+        # bench-smoke gate: the whole centralized grid is ONE XLA program
+        assert n_stacked >= 24, f"grid too small: {n_stacked} stacked slices"
+        assert stacked_programs == 1, (
+            f"{n_stacked}-slice knob grid compiled {stacked_programs} "
+            f"stacked programs, expected 1")
+        common.emit("fig_pareto_smoke", (time.time() - t0) * 1e6,
+                    f"grid_points={len(specs)};stacked_slices={n_stacked};"
+                    f"xla_programs={stacked_programs};gate=one_program")
+        return points
+
+    budget_pts = [p for p in points
+                  if area_budget is None or p["area"] <= area_budget]
+    frontier = pareto_frontier(budget_pts)
+    front_set = {p["label"] for p in frontier}
+
+    print("# DSE grid: ws / max_slowdown / nJ-per-request / area"
+          + (f" (area budget {area_budget:g})" if area_budget else ""))
+    print("label,policy,ws,max_slowdown,nj_per_req,area,on_frontier")
+    for p in sorted(budget_pts, key=lambda p: -p["weighted_speedup"]):
+        print(f"{p['label']},{p['policy']},{p['weighted_speedup']:.3f},"
+              f"{p['max_slowdown']:.2f},{p['energy_per_request_nj']:.2f},"
+              f"{p['area']:.0f},{int(p['label'] in front_set)}")
+
+    sms_pts = [p for p in points if p["policy"].startswith("sms")]
+    cen_pts = [p for p in points if not p["policy"].startswith("sms")]
+    best_sms = min(sms_pts, key=lambda p: p["energy_per_request_nj"])
+    best_cen = min(cen_pts, key=lambda p: p["energy_per_request_nj"])
+    assert best_sms["energy_per_request_nj"] \
+        < best_cen["energy_per_request_nj"], (
+        f"no SMS point beat the best centralized energy/request "
+        f"({best_cen['label']}: {best_cen['energy_per_request_nj']:.2f} nJ "
+        f"vs SMS best {best_sms['energy_per_request_nj']:.2f} nJ)")
+    sms_on_front = [p for p in frontier if p["policy"].startswith("sms")]
+    assert sms_on_front, "no SMS point on the Pareto frontier"
+
+    # refine the best-objective SMS point toward the frontier
+    hc = hillclimb(cfg, max(sms_pts, key=_objective), wls, n_cycles, force)
+
+    DSE_DIR.mkdir(parents=True, exist_ok=True)
+    (DSE_DIR / "pareto_grid.json").write_text(json.dumps(
+        {"points": points, "frontier": sorted(front_set),
+         "area_budget": area_budget, "stacked_slices": n_stacked,
+         "stacked_xla_programs": stacked_programs}, indent=1))
+
+    us = (time.time() - t0) * 1e6 / max(len(specs), 1)
+    common.emit(
+        "fig_pareto", us,
+        f"grid_points={len(specs)};frontier={len(frontier)};"
+        f"sms_on_frontier={len(sms_on_front)};"
+        f"sms_best_nj={best_sms['energy_per_request_nj']:.2f};"
+        f"cen_best_nj={best_cen['energy_per_request_nj']:.2f};"
+        f"hc_best_ws_per_nj={_objective(hc['best']):.4f};"
+        f"stacked_xla_programs={stacked_programs};"
+        f"paper=sms_dominates_on_energy")
+    return points
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid run asserting one-program compilation")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--area-budget", type=float, default=None)
+    args = ap.parse_args()
+    main(force=args.force, area_budget=args.area_budget, smoke=args.smoke)

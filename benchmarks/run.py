@@ -39,7 +39,7 @@ def main() -> None:
     cycles_small = 6_000 if args.quick else 12_000
 
     from benchmarks import (buffer_scaling, dash_deadline, fig_energy,
-                            fig_qos, fig1_characteristics,
+                            fig_pareto, fig_qos, fig1_characteristics,
                             fig4_perf_fairness, fig5_cpu_gpu,
                             fig6_core_scaling, fig7_channel_scaling,
                             p_sensitivity, power_area, simspeed)
@@ -71,6 +71,9 @@ def main() -> None:
         ("qos", lambda: fig_qos.main(3 if args.quick else 4,
                                      8_000 if args.quick else 12_000,
                                      args.force)),
+        ("dse", lambda: fig_pareto.main(2 if args.quick else 3,
+                                        6_000 if args.quick else 8_000,
+                                        args.force)),
     ]
 
     # framework benches (present once their modules are built)

@@ -161,6 +161,36 @@ def measure_nclass_smoke(n_cycles: int = 240, warmup: int = 60) -> Dict:
             "xla_programs": after - before}
 
 
+def measure_knob_grid(n_cycles: int = 260, warmup: int = 60) -> Dict:
+    """Design-grid smoke: the whole (policy x knob-variant) grid — every
+    stackable policy crossed with value-knob variants plus a period-knob
+    variant (per-slice static config) — must compile as ONE stacked XLA
+    program (`sim.simulate_stacked_grid`). Tiny fixed scale: this is a
+    compile-count gate for the batched-knob path (`make bench-dse`), not a
+    throughput measurement."""
+    cfg = common.parity_config()
+    variants = [
+        {},
+        {"cpu_reserve": 0.25},
+        {"cpu_reserve": 0.75, "energy_pd_idle": 16},
+        # period-like knobs ride the per-slice static config, value-like
+        # knobs the batched axis — one program must cover the mix
+        {"atlas_epoch": 1500, "tcm_quantum": 800, "cpu_reserve": 0.625},
+    ]
+    fam = list(sim.stackable_names(cfg))
+    slices = [(p, ov) for p in fam for ov in variants]
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=1)
+    pool, active = wl.pool_batch(cfg, wls)
+    before = compat.jit_cache_size(sim._sim_batch_stacked_grid)
+    t0 = time.time()
+    sim.simulate_stacked_grid(cfg, slices, pool, active, n_cycles, warmup)
+    wall = time.time() - t0
+    after = compat.jit_cache_size(sim._sim_batch_stacked_grid)
+    return {"policies": fam, "n_variants": len(variants),
+            "grid_points": len(slices), "wall_s": round(wall, 2),
+            "xla_programs": after - before}
+
+
 def measure_stacked_family(n_per_cat: int, n_cycles: int, warmup: int
                            ) -> Dict:
     """Cold-sweep wall-clock for the stackable CentralizedPolicy family,
@@ -287,6 +317,12 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
     nclass = measure_nclass_smoke()
     print(f"  3-class smoke ({len(nclass['policies'])} policies, "
           f"{nclass['n_hwa']} HWAs): xla_programs={nclass['xla_programs']}")
+    knob_grid = measure_knob_grid()
+    print(f"  knob grid ({knob_grid['grid_points']} points = "
+          f"{len(knob_grid['policies'])} policies x "
+          f"{knob_grid['n_variants']} variants): "
+          f"xla_programs={knob_grid['xla_programs']} "
+          f"in {knob_grid['wall_s']}s")
     event = measure_event_skip(**event_scale)
     print(f"  event skip: bursty {event['bursty']['ticked_wall_s']}s ticked"
           f" vs {event['bursty']['skipping_wall_s']}s skipping "
@@ -309,6 +345,7 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         "stacked_family": family,
         "sweep": sweep,
         "nclass_smoke": nclass,
+        "knob_grid": knob_grid,
         "event_skip": event,
     }
     # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
@@ -325,6 +362,9 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
             sweep["xla_programs"]["per_policy"] == n_fallback,
         "expected_fallbacks": n_fallback,
         "nclass_one_program": nclass["xla_programs"] == 1,
+        # the batched-knob design grid (bench-dse) is ONE stacked program
+        "dse_one_program": knob_grid["xla_programs"] == 1
+            and knob_grid["grid_points"] >= 24,
         # the event-skipping driver is a second while_loop body, not a
         # second program per policy: one stacked compile per batch shape
         "skip_one_program":
@@ -344,6 +384,9 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         f"expected {n_fallback} per-policy programs: {sweep['xla_programs']}"
     assert gates["nclass_one_program"], \
         f"3-class mix de-stacked the family: {nclass['xla_programs']} programs"
+    assert gates["dse_one_program"], \
+        f"knob grid de-stacked: {knob_grid['grid_points']} points compiled " \
+        f"{knob_grid['xla_programs']} stacked programs, expected 1"
     assert gates["skip_one_program"], \
         "skipping driver de-stacked the family: " \
         f"bursty={event['bursty']['skipping_xla_programs']} " \

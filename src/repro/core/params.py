@@ -10,8 +10,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Any, Dict, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 # ---------------------------------------------------------------------------
@@ -131,6 +133,178 @@ class SimConfig:
 
     def replace(self, **kw) -> "SimConfig":
         return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tunable knobs (ROADMAP "Tunable knobs contract"). SimConfig stays the
+# single source of defaults, but the simulator never reads a VALUE-LIKE knob
+# off it directly: `simulator._init` lifts them into a `Knobs` pytree and
+# hands hooks a `bind(cfg, knobs)` view. Because Knobs leaves are jax
+# arrays, a knob sweep can ride a vmapped variant axis through ONE compiled
+# program instead of recompiling per point.
+#
+# Two knob classes, split by how they enter the trace:
+#   * VALUE-LIKE (KNOB_SPECS): probabilities, caps, thresholds, fractions —
+#     consumed as jnp operands, so traced/batched values flow through
+#     unchanged.
+#   * PERIOD-LIKE (PERIOD_KNOBS): epoch/quantum/interval lengths feeding
+#     t-only boundary predicates and `next_boundary` witnesses. These MUST
+#     stay trace-time Python ints (a traced period would batch the
+#     predicate, dissolving the nested boundary `lax.cond` under vmap —
+#     same reasoning as the stacked-path rule against `lax.switch` on a
+#     batched index), so grids vary them per slice via `cfg.replace`.
+# ---------------------------------------------------------------------------
+
+KNOB_SPECS: Tuple[Tuple[str, Any], ...] = (
+    ("cpu_reserve", jnp.float32),
+    ("batch_age_cap", jnp.int32),
+    ("sjf_prob", jnp.float32),
+    ("atlas_alpha", jnp.float32),
+    ("parbs_cap", jnp.int32),
+    ("tcm_lat_frac", jnp.float32),
+    ("bliss_threshold", jnp.int32),
+    ("squash_lead", jnp.int32),
+    ("squash_pb", jnp.float32),
+    ("squash_gpu_pb", jnp.float32),
+    ("squash_cpu_pb", jnp.float32),
+    ("dash", jnp.bool_),
+    ("dash_svc_est", jnp.float32),
+    ("energy_pd_idle", jnp.int32),
+)
+KNOB_FIELDS: Tuple[str, ...] = tuple(n for n, _ in KNOB_SPECS)
+PERIOD_KNOBS: Tuple[str, ...] = ("atlas_epoch", "tcm_quantum",
+                                 "squash_epoch", "bliss_clear_interval")
+_KNOB_SET = frozenset(KNOB_FIELDS)
+
+
+@dataclass(frozen=True)
+class Knobs:
+    """The tunable-value half of a SimConfig, as a jax pytree.
+
+    Leaves carry canonical dtypes (so a default-knob trace emits the same
+    f32/i32 constants the old Python literals did — golden digests pinned)
+    and may be traced or batched. Build with `Knobs.from_cfg`.
+    """
+
+    cpu_reserve: Any
+    batch_age_cap: Any
+    sjf_prob: Any
+    atlas_alpha: Any
+    parbs_cap: Any
+    tcm_lat_frac: Any
+    bliss_threshold: Any
+    squash_lead: Any
+    squash_pb: Any
+    squash_gpu_pb: Any
+    squash_cpu_pb: Any
+    dash: Any
+    dash_svc_est: Any
+    energy_pd_idle: Any
+
+    @classmethod
+    def from_cfg(cls, cfg: "SimConfig", **overrides) -> "Knobs":
+        """Knobs at `cfg`'s values, with optional value-knob overrides.
+
+        Period-like knobs are rejected with a pointer to the per-slice
+        path (`cfg.replace` / `simulate_stacked_grid`)."""
+        bad_period = sorted(set(overrides) & set(PERIOD_KNOBS))
+        if bad_period:
+            raise ValueError(
+                f"period-like knobs {bad_period} cannot batch (they gate "
+                f"t-only boundary conds); vary them per slice via "
+                f"cfg.replace / simulate_stacked_grid")
+        bad = sorted(set(overrides) - _KNOB_SET)
+        if bad:
+            raise ValueError(f"not tunable value knobs: {bad}; "
+                             f"known: {sorted(_KNOB_SET)}")
+        vals = {n: overrides.get(n, getattr(cfg, n)) for n in KNOB_FIELDS}
+        return cls(**{n: jnp.asarray(v, dt) for (n, dt), v
+                      in zip(KNOB_SPECS, vals.values())})
+
+    def replace(self, **kw) -> "Knobs":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_pytree_node(
+    Knobs,
+    lambda k: (tuple(getattr(k, f) for f in KNOB_FIELDS), None),
+    lambda _, leaves: Knobs(*leaves))
+
+
+def stack_knobs(points: Sequence[Knobs]) -> Knobs:
+    """Stack knob points on a leading variant axis (for the grid vmap)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *points)
+
+
+def split_overrides(overrides: Dict[str, Any]):
+    """Split a mixed override dict into (period-like, value-like) parts."""
+    per = {k: v for k, v in overrides.items() if k in PERIOD_KNOBS}
+    val = {k: v for k, v in overrides.items() if k in _KNOB_SET}
+    bad = sorted(set(overrides) - set(per) - set(val))
+    if bad:
+        raise ValueError(f"not tunable knobs: {bad}")
+    return per, val
+
+
+def static_bool(x) -> Any:
+    """Concrete truth value of a knob, or None when it is traced.
+
+    Lets code keep a Python branch for statically-off features (identical
+    trace to the pre-Knobs literals) while falling back to masking when the
+    knob is genuinely batched."""
+    try:
+        return bool(x)
+    except Exception:
+        return None
+
+
+class BoundConfig:
+    """A SimConfig view with value-like knobs served from a `Knobs` pytree.
+
+    Everything shape-/period-/timing-like delegates to the underlying
+    SimConfig (trace-time Python values); the value knobs come from the
+    bound Knobs (possibly traced arrays). `gpu_cap` is recomputed from the
+    bound `cpu_reserve` (trunc == floor for the non-negative operand, so a
+    concrete default reproduces SimConfig.gpu_cap exactly).
+    """
+
+    __slots__ = ("_cfg", "_knobs")
+
+    def __init__(self, cfg: SimConfig, knobs: Knobs):
+        object.__setattr__(self, "_cfg", cfg)
+        object.__setattr__(self, "_knobs", knobs)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("BoundConfig is read-only")
+
+    def __getattr__(self, name):
+        if name in _KNOB_SET:
+            return getattr(self._knobs, name)
+        return getattr(self._cfg, name)
+
+    @property
+    def base(self) -> SimConfig:
+        return self._cfg
+
+    @property
+    def knobs(self) -> Knobs:
+        return self._knobs
+
+    @property
+    def gpu_cap(self):
+        cap = (jnp.float32(self._cfg.buf_entries)
+               * (1.0 - self._knobs.cpu_reserve)).astype(jnp.int32)
+        return jnp.maximum(jnp.int32(1), cap)
+
+    def __repr__(self):
+        return f"BoundConfig({self._cfg!r}, {self._knobs!r})"
+
+
+def bind(cfg: SimConfig, knobs: Knobs) -> BoundConfig:
+    """The config view the simulator hands to hooks: cfg + live knobs."""
+    if isinstance(cfg, BoundConfig):
+        cfg = cfg.base
+    return BoundConfig(cfg, knobs)
 
 
 @dataclass(frozen=True)

@@ -1,9 +1,11 @@
 """SMS and SMS-DASH as registered `MemoryPolicy` objects.
 
 The staged machinery lives in `repro.core.sms`; this module binds it to the
-protocol. SMS-DASH is a configured *variant* — same stages, with the
-deadline-aware stage-2 preemption switched on via `configure` — so it rides
-the registry instead of being a string special-case in the simulator.
+protocol. SMS-DASH is a *knob-point variant* — same stages, with the
+deadline-aware stage-2 preemption pinned on via `configure_knobs` (the
+`dash` value knob) — so it rides the registry instead of forking a second
+config: `configure` stays the identity, and a knob grid can sweep `dash`
+on plain "sms" without touching the registry at all.
 """
 from __future__ import annotations
 
@@ -45,6 +47,7 @@ class SMSDash(SMS):
     name = "sms_dash"
     variant_of = "sms"
 
-    def configure(self, cfg):
-        # SMS + deadline-aware stage 2 (paper §7 extension)
-        return cfg.replace(dash=True)
+    def configure_knobs(self, knobs):
+        # SMS + deadline-aware stage 2 (paper §7 extension): dash is a
+        # value knob, pinned True for this registry entry
+        return knobs.replace(dash=True)

@@ -7,7 +7,12 @@ object with
     name         registry key ("frfcfs", "sms", "bliss", ...)
     variant_of   None, or the name of the policy this one is a configured
                  variant of (variants are excluded from the baseline sweep)
-    configure(cfg)                    -> cfg     (bake policy knobs in)
+    configure(cfg)                    -> cfg     (static/shape adjustments
+                                         only; value knobs go through
+                                         configure_knobs — see below)
+    configure_knobs(knobs)            -> knobs   (optional: pin value-like
+                                         knobs, e.g. sms_dash sets dash=True;
+                                         the default is identity)
     init_state(cfg)                   -> sched   (pytree of jax arrays)
     tick(cfg, pool, st, sched, t)     -> (st, sched)        admission +
                                          periodic policy maintenance
@@ -36,9 +41,10 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import energy, engine
-from repro.core.params import SimConfig
+from repro.core import energy, engine, params
+from repro.core.params import Knobs, SimConfig
 
 
 class MemoryPolicy(Protocol):
@@ -146,16 +152,35 @@ def baseline_names() -> Tuple[str, ...]:
                  if getattr(p, "variant_of", None) is None)
 
 
+def resolve_knobs(cfg: SimConfig, pol, knobs: Optional[Knobs] = None
+                  ) -> Knobs:
+    """The knob point a policy actually runs at: caller-supplied (or cfg
+    defaults) filtered through the policy's optional `configure_knobs`."""
+    kn = Knobs.from_cfg(cfg) if knobs is None else knobs
+    ck = getattr(pol, "configure_knobs", None)
+    return ck(kn) if ck is not None else kn
+
+
 def is_stackable(name: str, cfg: SimConfig) -> bool:
     """True if `name` opts into the stacked cross-policy execution path.
 
     Stackability is declared by the policy (`stackable = True`, see
-    `CentralizedPolicy`) AND requires `configure` to leave cfg untouched —
-    stacked slices share one static config, so a policy that bakes knobs in
-    (e.g. sms_dash) must run the per-policy path.
+    `CentralizedPolicy`) AND requires `configure` to leave cfg untouched
+    AND `configure_knobs` to be the identity at this config — stacked
+    slices share one static config and, by default, cfg's knob point, so a
+    policy that pins either (e.g. sms_dash's dash=True) must run the
+    per-policy path.
     """
     pol = get(name)
-    return bool(getattr(pol, "stackable", False)) and pol.configure(cfg) == cfg
+    if not getattr(pol, "stackable", False) or pol.configure(cfg) != cfg:
+        return False
+    ck = getattr(pol, "configure_knobs", None)
+    if ck is None:
+        return True
+    base = Knobs.from_cfg(cfg)
+    resolved = ck(base)
+    return all(np.asarray(getattr(resolved, f)) == np.asarray(getattr(base, f))
+               for f in params.KNOB_FIELDS)
 
 
 def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):

@@ -46,7 +46,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy, engine
+from repro.core import energy, engine, params
 from repro.core.params import SimConfig
 
 AGE_CAP = (1 << 14) - 1
@@ -410,7 +410,8 @@ def _slice_tree(tree, i):
     return jax.tree_util.tree_map(lambda a: a[i], tree)
 
 
-def make_stacked_step(cfg: SimConfig, pols, pool, active):
+def make_stacked_step(cfg: SimConfig, pols, pool, active, cfgs=None,
+                      knobs=None):
     """One simulator cycle for P stacked centralized policies.
 
     The carry is the usual (st, buf, dram) triple with every leaf carrying a
@@ -419,8 +420,16 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
     dispatch per policy slice, and only the union of each policy family's
     declared write-sets is re-stacked — untouched padding rides through the
     carry unchanged.
+
+    Knob-grid extension (both default to the legacy trace when None):
+    `cfgs` supplies a per-slice config view — e.g. `params.bind`ed
+    BoundConfigs carrying per-slice period overrides and knob slices — for
+    the per-slice hook dispatch; `knobs` is the variant-stacked Knobs
+    pytree, vmapped into the two pieces of shared engine work that read
+    value knobs (admission's gpu_cap, the power-down idle threshold).
     """
     P = len(pols)
+    cfgs = list(cfgs) if cfgs is not None else [cfg] * P
     tick_union = sorted(set().union(*(
         p.stacked_tick_keys if p.stacked_tick_keys is not None
         else p.boundary_keys for p in pols)))
@@ -431,16 +440,27 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
         st, buf, dram = carry
         st, dram = vP(lambda s, d: engine.completions_tick(s, d, t)
                       )(st, dram)
-        dram = vP(lambda d: energy.background_tick(cfg, d, t))(dram)
+        if knobs is None:
+            dram = vP(lambda d: energy.background_tick(cfg, d, t))(dram)
+        else:
+            dram = vP(lambda d, kn: energy.background_tick(
+                params.bind(cfg, kn), d, t))(dram, knobs)
         st = vP(lambda s: engine.deadline_tick(cfg, pool, s, t))(st)
         st = vP(lambda s: engine.source_tick(cfg, pool, s, active, t))(st)
         # admission: policy-ordered key per slice, one merged admit
         key = jnp.stack([
-            p.admit_key(cfg, pool, _slice_tree(st, i), _slice_tree(buf, i), t)
+            p.admit_key(cfgs[i], pool, _slice_tree(st, i),
+                        _slice_tree(buf, i), t)
             for i, p in enumerate(pols)])
-        st, buf, do, slot, src = vP(
-            lambda s, b, k: admit(cfg, pool, s, b, t, key=k))(st, buf, key)
-        new = [p.tick_hooks(cfg, pool, _slice_tree(st, i),
+        if knobs is None:
+            st, buf, do, slot, src = vP(
+                lambda s, b, k: admit(cfg, pool, s, b, t, key=k)
+                )(st, buf, key)
+        else:
+            st, buf, do, slot, src = vP(
+                lambda s, b, k, kn: admit(params.bind(cfg, kn), pool, s, b,
+                                          t, key=k))(st, buf, key, knobs)
+        new = [p.tick_hooks(cfgs[i], pool, _slice_tree(st, i),
                             _slice_tree(buf, i), do[i], slot[i], src[i], t)
                for i, p in enumerate(pols)]
         buf = {**buf, **{k: jnp.stack([n[k] for n in new])
@@ -449,7 +469,7 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
         elig, lat, is_hit = vP(
             lambda b, d: eligibility_grid(cfg, b, d, t))(buf, dram)
         score = jnp.stack([
-            p.score(cfg, pool, _slice_tree(buf, i), is_hit[i], t)
+            p.score(cfgs[i], pool, _slice_tree(buf, i), is_hit[i], t)
             for i, p in enumerate(pols)])
         score = jnp.where(elig, score, -1)
         st, dram, do, pick, src = vP(
@@ -457,8 +477,9 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
                                                      hi, t)
         )(st, buf, dram, score, lat, is_hit)
         if issue_union:
-            new = [p.on_issue(cfg, pool, _slice_tree(buf, i), do[i], pick[i],
-                              src[i], t) for i, p in enumerate(pols)]
+            new = [p.on_issue(cfgs[i], pool, _slice_tree(buf, i), do[i],
+                              pick[i], src[i], t)
+                   for i, p in enumerate(pols)]
             buf = {**buf, **{k: jnp.stack([n[k] for n in new])
                              for k in issue_union}}
         buf = vP(lambda b, d, pk, sr: clear_picked(cfg, pool, b, d, pk, sr)
@@ -468,7 +489,8 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active):
     return step
 
 
-def make_stacked_skip_step(cfg: SimConfig, pols, pool, active):
+def make_stacked_skip_step(cfg: SimConfig, pols, pool, active, cfgs=None,
+                           knobs=None):
     """Variable-step body for the stacked family (see `policy.make_skip_step`
     for the single-policy contract).
 
@@ -484,7 +506,8 @@ def make_stacked_skip_step(cfg: SimConfig, pols, pool, active):
     """
     if not all(hasattr(p, "next_event") for p in pols):
         return None
-    step = make_stacked_step(cfg, pols, pool, active)
+    step = make_stacked_step(cfg, pols, pool, active, cfgs=cfgs, knobs=knobs)
+    cfgs = list(cfgs) if cfgs is not None else [cfg] * len(pols)
     vP = jax.vmap
 
     def skip_body(carry, t, t_end):
@@ -494,19 +517,30 @@ def make_stacked_skip_step(cfg: SimConfig, pols, pool, active):
             cfg, pool, s, active, t))(st))
         te = jnp.minimum(te, jnp.min(vP(
             lambda d: engine.next_completion(d, t))(dram)))
-        te = jnp.minimum(te, jnp.min(vP(
-            lambda s, b: next_admission(cfg, pool, s, b, t))(st, buf)))
+        if knobs is None:
+            te = jnp.minimum(te, jnp.min(vP(
+                lambda s, b: next_admission(cfg, pool, s, b, t))(st, buf)))
+        else:
+            # admission readiness reads gpu_cap, a value knob — thread the
+            # per-slice knob point through the vmapped witness
+            te = jnp.minimum(te, jnp.min(vP(
+                lambda s, b, kn: next_admission(params.bind(cfg, kn), pool,
+                                                s, b, t))(st, buf, knobs)))
         te = jnp.minimum(te, jnp.min(vP(
             lambda b, d: next_issue_ready(cfg, b, d, t))(buf, dram)))
         for i, p in enumerate(pols):
-            nb = p.next_boundary(cfg, pool, _slice_tree(st, i),
+            nb = p.next_boundary(cfgs[i], pool, _slice_tree(st, i),
                                  _slice_tree(buf, i), t)
             if nb is not None:
                 te = jnp.minimum(te, nb)
         t_new = jnp.minimum(te, t_end)
         k = t_new - t - 1
         st = vP(lambda s: engine.skip_sources(cfg, pool, s, active, k))(st)
-        dram = vP(lambda d: energy.skip_accrue(cfg, d, t, t_new))(dram)
+        if knobs is None:
+            dram = vP(lambda d: energy.skip_accrue(cfg, d, t, t_new))(dram)
+        else:
+            dram = vP(lambda d, kn: energy.skip_accrue(
+                params.bind(cfg, kn), d, t, t_new))(dram, knobs)
         return (st, buf, dram), t_new
 
     return skip_body

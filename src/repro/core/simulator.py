@@ -49,16 +49,22 @@ def __getattr__(name: str):
         return policy_api.names()
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
-def _init(cfg: SimConfig, policy: str):
-    """Resolve the policy and build (cfg, policy object, initial carry).
+def _init(cfg: SimConfig, policy: str, knobs=None):
+    """Resolve the policy and build (bound cfg, policy object, carry).
 
     The carry holds only cycle-varying state; read-only workload parameters
-    (pool, active) are closed over in `policy.make_step`.
+    (pool, active) are closed over in `policy.make_step`. The returned cfg
+    is a `params.BoundConfig`: shapes/periods stay trace-time Python values
+    while value-like knobs come from `knobs` (default: cfg's own values,
+    filtered through the policy's `configure_knobs`) — possibly traced
+    arrays riding a vmapped variant axis.
     """
     pol = policy_api.get(policy)
     cfg = pol.configure(cfg)
-    return cfg, pol, (engine.source_state(cfg), pol.init_state(cfg),
-                      engine.dram_state(cfg))
+    kn = policy_api.resolve_knobs(cfg, pol, knobs)
+    carry = (engine.source_state(cfg), pol.init_state(cfg),
+             engine.dram_state(cfg))
+    return params.bind(cfg, kn), pol, carry
 
 
 def _run_cycles(step, skip_body, carry, t0: int, t1: int, unroll: int):
@@ -163,8 +169,8 @@ def _scan_and_measure(cfg: SimConfig, step, skip_body, carry, n_cycles: int,
 
 def _one_sim(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
              unroll: int, skip: bool, pool: Dict[str, jax.Array],
-             active: jax.Array) -> Dict[str, jax.Array]:
-    cfg, pol, carry = _init(cfg, policy)
+             active: jax.Array, knobs=None) -> Dict[str, jax.Array]:
+    cfg, pol, carry = _init(cfg, policy, knobs)
     step = policy_api.make_step(cfg, pol, pool, active)
     skip_body = policy_api.make_skip_step(cfg, pol, pool, active) \
         if skip else None
@@ -187,10 +193,17 @@ DEFAULT_SKIP = False
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5),
                    donate_argnums=(6, 7))
 def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
-               unroll: int, skip: bool, pool_batch, active_batch):
-    return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup,
-                                          unroll, skip, p, a)
-                    )(pool_batch, active_batch)
+               unroll: int, skip: bool, pool_batch, active_batch,
+               knobs=None):
+    """(W, ...) metrics; with `knobs` (a `Knobs` pytree stacked on a leading
+    variant axis) the whole knob grid rides an inner vmap: (W, V, ...)."""
+    if knobs is None:
+        return jax.vmap(lambda p, a: _one_sim(cfg, policy, n_cycles, warmup,
+                                              unroll, skip, p, a)
+                        )(pool_batch, active_batch)
+    return jax.vmap(lambda p, a: jax.vmap(
+        lambda kn: _one_sim(cfg, policy, n_cycles, warmup, unroll, skip,
+                            p, a, kn))(knobs))(pool_batch, active_batch)
 
 
 def prepare_pool(pool: Dict[str, Any], shape, copy: bool = False
@@ -249,6 +262,61 @@ def simulate(cfg: SimConfig, policy: str, pool_batch: Dict[str, np.ndarray],
     out = simulate_async(cfg, policy, pool_batch, active_batch, n_cycles,
                          warmup, unroll, skip)
     return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# knob-grid execution: a (variant, workload) sweep of ONE policy in ONE
+# compiled program (ROADMAP "Tunable knobs contract"). Value-like knob
+# points stack on a vmapped variant axis inside `_sim_batch`.
+# ---------------------------------------------------------------------------
+
+def _knob_points(cfg: SimConfig, points) -> params.Knobs:
+    """Normalize a sequence of knob points (override dicts or `Knobs`) to a
+    variant-stacked Knobs pytree."""
+    kns = [params.Knobs.from_cfg(cfg, **pt) if isinstance(pt, dict) else pt
+           for pt in points]
+    return params.stack_knobs(kns)
+
+
+def simulate_grid_async(cfg: SimConfig, policy: str, points,
+                        pool_batch: Dict[str, np.ndarray],
+                        active_batch: np.ndarray, n_cycles: int = 20_000,
+                        warmup: int = 2_000, unroll: int = None,
+                        skip: bool = None) -> Dict[str, jax.Array]:
+    """One dispatch for a knob grid of one policy; (W, V, ...) device arrays.
+
+    `points` is a sequence of value-knob override dicts (or `Knobs`); the
+    grid shares a single scan body and jits into one XLA program, vmapped
+    over (workload, variant). Period-like knobs are rejected here — they
+    need per-slice traces (see `simulate_stacked_grid`).
+    """
+    pool_batch = prepare_pool(pool_batch, np.asarray(active_batch).shape,
+                              copy=True)
+    knobs = _knob_points(cfg, points)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _sim_batch(cfg, policy, n_cycles, warmup,
+                          DEFAULT_UNROLL if unroll is None else unroll,
+                          DEFAULT_SKIP if skip is None else skip,
+                          pool_batch, jnp.array(active_batch, copy=True),
+                          knobs)
+
+
+def simulate_grid(cfg: SimConfig, policy: str, points,
+                  pool_batch: Dict[str, np.ndarray],
+                  active_batch: np.ndarray, n_cycles: int = 20_000,
+                  warmup: int = 2_000, unroll: int = None,
+                  skip: bool = None) -> list:
+    """Per-variant (W, S) metric dicts, parallel to `points`.
+
+    Each variant slice is bit-identical to a `simulate` run with the same
+    values baked into SimConfig (pinned by tests/test_knobs.py)."""
+    out = simulate_grid_async(cfg, policy, points, pool_batch, active_batch,
+                              n_cycles, warmup, unroll, skip)
+    host = {k: np.asarray(v) for k, v in out.items()}
+    n = len(points)
+    return [{k: v[:, i] for k, v in host.items()} for i in range(n)]
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +411,117 @@ def simulate_stacked(cfg: SimConfig, policies,
     host = {k: np.asarray(v) for k, v in out.items()}
     return {pol: {k: v[:, i] for k, v in host.items()}
             for i, pol in enumerate(policies)}
+
+
+# ---------------------------------------------------------------------------
+# stacked (policy x knob-variant) grid: the DSE driver. Slices stack policy
+# AND knob variants on the same leading axis; value-like knobs ride the
+# stacked Knobs pytree through the shared engine work while period-like
+# overrides re-trace only that slice's hooks (trace-time dispatch, so every
+# boundary cond and skip witness survives).
+# ---------------------------------------------------------------------------
+
+def _norm_grid_slices(cfg: SimConfig, slices):
+    """Split mixed per-slice overrides into the static (hashable) slice
+    spec — (policy, sorted period-knob items) — and the value-knob points.
+    """
+    static, points = [], []
+    for s in slices:
+        name, ov = (s, {}) if isinstance(s, str) else s
+        per, val = params.split_overrides(dict(ov))
+        static.append((name, tuple(sorted(per.items()))))
+        points.append(params.Knobs.from_cfg(cfg, **val))
+    return tuple(static), points
+
+
+def _init_stacked_grid(cfg: SimConfig, slices):
+    """Resolve + validate grid slices; (pols, per-slice cfgs, carry)."""
+    from repro.core import schedulers
+
+    pols = [policy_api.get(name) for name, _ in slices]
+    cfgs = [cfg.replace(**dict(ov)) for _, ov in slices]
+    bad = [name for (name, _), c in zip(slices, cfgs)
+           if not policy_api.is_stackable(name, c)]
+    if bad:
+        raise ValueError(f"not stackable under this config: {bad}")
+    # period overrides never touch array shapes, so the union schema and the
+    # engine state stack exactly as in `_init_stacked`
+    bufs = schedulers.stacked_union_state(cfg, pols)
+    stack = schedulers._stack_trees
+    P = len(pols)
+    carry = (stack([engine.source_state(cfg)] * P), stack(bufs),
+             stack([engine.dram_state(cfg)] * P))
+    return pols, cfgs, carry
+
+
+def _one_sim_stacked_grid(cfg: SimConfig, slices, n_cycles: int, warmup: int,
+                          unroll: int, skip: bool, pool, active, knobs):
+    from repro.core import schedulers
+
+    pols, cfgs, carry = _init_stacked_grid(cfg, slices)
+    bcfgs = [params.bind(c, policy_api.resolve_knobs(
+        c, p, schedulers._slice_tree(knobs, i)))
+        for i, (p, c) in enumerate(zip(pols, cfgs))]
+    step = schedulers.make_stacked_step(cfg, pols, pool, active,
+                                        cfgs=bcfgs, knobs=knobs)
+    skip_body = schedulers.make_stacked_skip_step(
+        cfg, pols, pool, active, cfgs=bcfgs, knobs=knobs) if skip else None
+    return _scan_and_measure(cfg, step, skip_body, carry, n_cycles, warmup,
+                             unroll)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4, 5),
+                   donate_argnums=(6, 7))
+def _sim_batch_stacked_grid(cfg: SimConfig, slices, n_cycles: int,
+                            warmup: int, unroll: int, skip: bool,
+                            pool_batch, active_batch, knobs):
+    return jax.vmap(lambda p, a: _one_sim_stacked_grid(
+        cfg, slices, n_cycles, warmup, unroll, skip, p, a, knobs)
+        )(pool_batch, active_batch)
+
+
+def simulate_stacked_grid_async(cfg: SimConfig, slices,
+                                pool_batch: Dict[str, np.ndarray],
+                                active_batch: np.ndarray,
+                                n_cycles: int = 20_000, warmup: int = 2_000,
+                                unroll: int = None, skip: bool = None
+                                ) -> Dict[str, jax.Array]:
+    """One dispatch for a (policy x knob-variant) grid; (W, N, S) arrays.
+
+    `slices` is a sequence of policy names or (policy, overrides) pairs;
+    overrides may mix value-like knobs (batched on the variant axis) and
+    period-like knobs (per-slice trace-time dispatch). Policies may repeat
+    — e.g. 6 policies x 4 knob points = 24 slices in ONE XLA program.
+    """
+    static, points = _norm_grid_slices(cfg, slices)
+    knobs = params.stack_knobs(points)
+    pool_batch = prepare_pool(pool_batch, np.asarray(active_batch).shape,
+                              copy=True)
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _sim_batch_stacked_grid(
+            cfg, static, n_cycles, warmup,
+            DEFAULT_UNROLL if unroll is None else unroll,
+            DEFAULT_SKIP if skip is None else skip,
+            pool_batch, jnp.array(active_batch, copy=True), knobs)
+
+
+def simulate_stacked_grid(cfg: SimConfig, slices,
+                          pool_batch: Dict[str, np.ndarray],
+                          active_batch: np.ndarray, n_cycles: int = 20_000,
+                          warmup: int = 2_000, unroll: int = None,
+                          skip: bool = None) -> list:
+    """Per-slice (W, S) metric dicts, parallel to `slices`.
+
+    Each slice is bit-identical to a solo `simulate` run with the same
+    overrides baked into SimConfig (tests/test_knobs.py), with the usual
+    stacked-path exception for the shared `sim_steps` step meter."""
+    out = simulate_stacked_grid_async(cfg, slices, pool_batch, active_batch,
+                                      n_cycles, warmup, unroll, skip)
+    host = {k: np.asarray(v) for k, v in out.items()}
+    return [{k: v[:, i] for k, v in host.items()}
+            for i in range(len(slices))]
 
 
 def simulate_debug_stacked(cfg: SimConfig, policies,

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.params import CLS_HWA, SimConfig
+from repro.core.params import CLS_HWA, SimConfig, static_bool
 
 
 def sms_state(cfg: SimConfig) -> Dict[str, Any]:
@@ -141,7 +141,12 @@ def stage2_drain(cfg: SimConfig, pool, st, sms, t):
     rr_key = jnp.where(ready, rr_off, 1 << 28)
     rr_pick = jnp.argmin(rr_key, axis=-1)
     pick = jnp.where(use_sjf, sjf_pick, rr_pick)
-    if cfg.dash:
+    # `dash` is a value knob: statically False keeps the block out of the
+    # trace entirely (the legacy SMS trace); statically True is the legacy
+    # sms_dash trace; a traced/batched knob keeps the block and masks the
+    # preemption with the knob itself.
+    dash_on = static_bool(cfg.dash)
+    if dash_on is not False:
         # SMS-DASH (paper §7 / Usui et al.): an HWA whose frame slack is
         # below its estimated remaining service time preempts the SJF/RR
         # choice; least-slack-first among urgent ready batches.
@@ -156,6 +161,8 @@ def stage2_drain(cfg: SimConfig, pool, st, sms, t):
         u_key = jnp.where(urgent_ready, slack[None, :], jnp.float32(1e30))
         u_pick = jnp.argmin(u_key, axis=-1)
         any_urgent = jnp.any(urgent_ready, axis=-1)
+        if dash_on is None:
+            any_urgent = any_urgent & cfg.dash
         pick = jnp.where(any_urgent, u_pick, pick)
         use_sjf = use_sjf | any_urgent          # don't advance rr on preempt
     any_ready = jnp.any(ready, axis=-1)

@@ -211,3 +211,7 @@ class SMSScheduler(SchedulerBase):
 
 SCHEDULERS.register("sms_adaptive")(
     functools.partial(SMSScheduler, adaptive_p=True, sjf_prob=0.7))
+
+# registers the utilization-aware admission-control policy ("admission");
+# bottom import so its SchedulerBase/SCHEDULERS imports resolve
+from repro.serving import admission as _admission  # noqa: E402,F401

@@ -1,0 +1,127 @@
+"""Utilization-aware admission control (repro.serving.admission): threshold
+gating, moving-average spike detection, cooldown, conservation, registry."""
+from repro.serving.admission import AdmissionControlScheduler, request_cost
+from repro.serving.scheduler import SCHEDULERS
+from repro.serving.types import Request
+
+
+def _req(rid, cost, arrival=0.0, client=0):
+    return Request(rid=rid, client=client, prefix_id=0, prompt_len=cost,
+                   max_new=0, arrival=arrival)
+
+
+def _mk(**kw):
+    kw.setdefault("capacity_tokens", 1000)
+    kw.setdefault("cooldown_ms", 25.0)
+    return AdmissionControlScheduler(n_clients=4, **kw)
+
+
+def test_registered_with_serving_registry():
+    assert "admission" in SCHEDULERS
+    sched = SCHEDULERS["admission"](4)
+    assert isinstance(sched, AdmissionControlScheduler)
+
+
+def test_admits_lightest_first_under_low_load():
+    s = _mk()
+    s.enqueue(_req(0, 300, arrival=0.0), 0.0)
+    s.enqueue(_req(1, 100, arrival=1.0), 1.0)
+    s.enqueue(_req(2, 100, arrival=0.5), 1.0)
+    order = [s.pop_admission(2.0).rid for _ in range(3)]
+    # lightest first; equal-cost ties broken by arrival (FCFS)
+    assert order == [2, 1, 0]
+    assert s.pop_admission(3.0) is None
+
+
+def test_threshold_gates_admission():
+    s = _mk(threshold=0.85, headroom=1.0)
+    for rid in range(5):
+        s.enqueue(_req(rid, 300), 0.0)
+    admitted = []
+    while (r := s.pop_admission(0.0)) is not None:
+        admitted.append(r)
+    # 2 x 300 in flight; a third would put effective load at 0.9 > 0.85
+    assert len(admitted) == 2
+    assert s.inflight_tokens == 600
+    assert s.queued() == 3
+
+
+def test_finish_frees_capacity_and_resumes():
+    s = _mk(threshold=0.85, headroom=1.0)
+    for rid in range(5):
+        s.enqueue(_req(rid, 300), 0.0)
+    a = s.pop_admission(0.0)
+    b = s.pop_admission(0.0)
+    assert s.pop_admission(0.0) is None
+    s.on_finish(a)
+    # cooldown may have latched on the step up to 0.6 utilization; admission
+    # must resume once it expires
+    assert s.pop_admission(s.cooldown_until + 1.0) is not None
+    s.on_finish(b)
+    assert s.inflight_tokens == 300
+
+
+def test_spike_triggers_cooldown_then_recovers():
+    s = _mk(threshold=0.9, headroom=1.0, ema_alpha=0.1, spike_ratio=1.5)
+    # a long quiet phase anchors the moving average near zero load
+    for t in range(50):
+        s.pop_admission(float(t))
+    assert s.spikes == 0
+    # burst: one heavy admission jumps utilization far above the average
+    s.enqueue(_req(0, 600), 50.0)
+    heavy = s.pop_admission(50.0)
+    assert heavy is not None
+    assert s.pop_admission(50.5) is None   # queue empty; spike latches here
+    assert s.spikes == 1
+    s.enqueue(_req(1, 100), 51.0)
+    assert s.pop_admission(51.0) is None, "admission during cooldown"
+    assert s.cooldown_until > 51.0
+    # load drained and cooldown expired: the light request is admitted
+    s.on_finish(heavy)
+    assert s.pop_admission(s.cooldown_until + 1.0).rid == 1
+
+
+def test_gradual_rise_is_not_a_spike():
+    s = _mk(threshold=0.95, headroom=1.0, ema_alpha=0.5, spike_ratio=1.5)
+    # many light admissions, tracker stepping between each: the average
+    # tracks the rise, so no spike/cooldown ever latches
+    for rid in range(8):
+        s.enqueue(_req(rid, 100), float(rid))
+        assert s.pop_admission(float(rid)) is not None
+    assert s.spikes == 0
+
+
+def test_conservation_everything_eventually_admitted():
+    s = _mk(threshold=0.85, headroom=1.0)
+    reqs = [_req(rid, 150 + 37 * (rid % 5)) for rid in range(40)]
+    for r in reqs:
+        s.enqueue(r, 0.0)
+    admitted, inflight, now = [], [], 0.0
+    while len(admitted) < len(reqs):
+        r = s.pop_admission(now)
+        if r is not None:
+            admitted.append(r)
+            inflight.append(r)
+        elif inflight:
+            s.on_finish(inflight.pop(0))
+        now += 1.0
+        assert now < 10_000, "admission control wedged"
+    assert sorted(r.rid for r in admitted) == [r.rid for r in reqs]
+    for r in inflight:
+        s.on_finish(r)
+    assert s.inflight_tokens == 0 and s.queued() == 0
+
+
+def test_cost_estimate_counts_decode_budget():
+    assert request_cost(_req(0, 100)) == 100
+    r = Request(rid=1, client=0, prefix_id=0, prompt_len=100, max_new=32,
+                arrival=0.0)
+    assert request_cost(r) == 132
+
+
+def test_runs_under_serving_engine():
+    from repro.serving.engine import EngineConfig, fairness_report
+    from repro.serving.types import default_clients
+    rep = fairness_report("admission", default_clients(), horizon_ms=1_000,
+                          engine_cfg=EngineConfig())
+    assert rep["total_finished"] > 0

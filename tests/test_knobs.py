@@ -1,0 +1,176 @@
+"""Tunable-knob contract (repro.core.params.Knobs): every knob-variant
+slice of a batched grid run is bit-identical to the same values baked into
+a legacy SimConfig run, per policy, with energy + QoS accounting on;
+default-knob runs match the legacy path exactly; the variable-step skip
+driver stays bit-identical at non-default knob points."""
+import numpy as np
+import pytest
+
+from repro.core import params
+from repro.core import policy as policy_api
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+from repro.core.params import Knobs, SimConfig
+
+CFG = SimConfig(n_cpu=3, n_gpu=1, n_channels=2, buf_entries=24,
+                fifo_size=5, dcs_size=3)
+N_CYCLES, WARMUP = 1_500, 300
+
+# one non-default value point per policy (value-like knobs only)
+VALUE_POINTS = {
+    "frfcfs": {"cpu_reserve": 0.25},
+    "atlas": {"atlas_alpha": 0.75},
+    "parbs": {"parbs_cap": 3},
+    "tcm": {"tcm_lat_frac": 0.5},
+    "bliss": {"bliss_threshold": 2},
+    "squash_prio": {"squash_lead": 40, "squash_pb": 0.5},
+    "sms": {"sjf_prob": 0.5, "batch_age_cap": 100, "dash": True},
+}
+# period-like knobs ride the static config per slice
+PERIOD_POINTS = {
+    "atlas": {"atlas_epoch": 1500},
+    "tcm": {"tcm_quantum": 800},
+    "bliss": {"bliss_clear_interval": 5000},
+}
+
+
+def _pool(cfg):
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=1)[:4]
+    return wl.pool_batch(cfg, wls)
+
+
+def _assert_equal(a, b, ctx, skip_keys=()):
+    # urgent_admits surfaces whenever squash_prio is in the stacked family,
+    # so a stacked slice may carry it while the solo run does not
+    assert (set(a) ^ set(b)) <= {"urgent_admits"}, ctx
+    for k in set(a) & set(b):
+        if k in skip_keys:
+            continue
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{ctx}: metric {k}")
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return _pool(CFG)
+
+
+# ---------------------------------------------------------------------------
+# (a) knob-variant slices == baked-SimConfig runs, per policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol", sorted(VALUE_POINTS))
+def test_grid_slice_matches_baked_config(pol, pool):
+    assert CFG.energy_enabled and CFG.qos_enabled
+    p, a = pool
+    ov = VALUE_POINTS[pol]
+    got = sim.simulate_grid(CFG, pol, [{}, ov], p, a, N_CYCLES, WARMUP)
+    legacy_def = sim.simulate(CFG, pol, p, a, N_CYCLES, WARMUP)
+    legacy_ov = sim.simulate(CFG.replace(**ov), pol, p, a, N_CYCLES, WARMUP)
+    _assert_equal(got[0], legacy_def, f"{pol} default slice")
+    _assert_equal(got[1], legacy_ov, f"{pol} variant slice")
+
+
+def test_stacked_grid_matches_baked_configs(pool):
+    """Policy x knob variants on ONE stacked slice axis, including a
+    period-like override (per-slice static config) and a repeated policy."""
+    p, a = pool
+    slices = [(pol, {**VALUE_POINTS[pol], **PERIOD_POINTS.get(pol, {})})
+              for pol in sorted(set(VALUE_POINTS) - {"sms"})] \
+        + [("frfcfs", {})]
+    got = sim.simulate_stacked_grid(CFG, slices, p, a, N_CYCLES, WARMUP)
+    for (pol, ov), g in zip(slices, got):
+        legacy = sim.simulate(CFG.replace(**ov), pol, p, a, N_CYCLES, WARMUP)
+        # sim_steps is the shared family skip meter, not a policy metric
+        _assert_equal(g, legacy, f"stacked {pol}@{ov}",
+                      skip_keys=("sim_steps",))
+
+
+def test_sms_dash_is_a_knob_point(pool):
+    """sms_dash (registry variant) == plain sms at the dash=True knob
+    point: the fork is gone, only the knob remains."""
+    p, a = pool
+    dash = sim.simulate(CFG, "sms_dash", p, a, N_CYCLES, WARMUP)
+    knob = sim.simulate_grid(CFG, "sms", [{"dash": True}], p, a,
+                             N_CYCLES, WARMUP)[0]
+    _assert_equal(knob, dash, "sms_dash vs dash knob")
+
+
+# ---------------------------------------------------------------------------
+# (b) default knob point == legacy trace (golden digests stay unchanged)
+# ---------------------------------------------------------------------------
+
+def test_default_knobs_match_cfg():
+    kn = Knobs.from_cfg(CFG)
+    for f in params.KNOB_FIELDS:
+        assert np.asarray(getattr(kn, f)).item() == \
+            pytest.approx(getattr(CFG, f)), f
+
+
+def test_default_grid_slice_is_legacy_run(pool):
+    p, a = pool
+    for pol in ("atlas", "sms"):
+        got = sim.simulate_grid(CFG, pol, [{}], p, a, N_CYCLES, WARMUP)[0]
+        legacy = sim.simulate(CFG, pol, p, a, N_CYCLES, WARMUP)
+        _assert_equal(got, legacy, f"{pol} default point")
+
+
+# ---------------------------------------------------------------------------
+# (c) skip driver bit-identity at a non-default knob point
+# ---------------------------------------------------------------------------
+
+def test_skip_bit_identity_at_knob_point():
+    cfg = SimConfig(n_cpu=3, n_gpu=1, n_hwa=2, n_channels=2, buf_entries=24,
+                    fifo_size=5, dcs_size=3)
+    p, a = wl.bursty_batch(cfg)
+    point = {"batch_age_cap": 100, "cpu_reserve": 0.25}
+    tick = sim.simulate_grid(cfg, "sms", [point], p, a, N_CYCLES, WARMUP,
+                             skip=False)[0]
+    skip = sim.simulate_grid(cfg, "sms", [point], p, a, N_CYCLES, WARMUP,
+                             skip=True)[0]
+    assert float(np.mean(skip["sim_steps"])) < N_CYCLES, \
+        "skip driver processed every cycle: witnesses broken at knob point"
+    _assert_equal(tick, skip, "sms ticked vs skip", skip_keys=("sim_steps",))
+
+
+def test_stacked_skip_bit_identity_at_knob_points():
+    cfg = SimConfig(n_cpu=3, n_gpu=1, n_hwa=2, n_channels=2, buf_entries=24,
+                    fifo_size=5, dcs_size=3)
+    p, a = wl.bursty_batch(cfg)
+    slices = [("atlas", {"atlas_epoch": 1500, "atlas_alpha": 0.75}),
+              ("frfcfs", {"cpu_reserve": 0.25}),
+              ("bliss", {"bliss_threshold": 2,
+                         "bliss_clear_interval": 5000})]
+    tick = sim.simulate_stacked_grid(cfg, slices, p, a, N_CYCLES, WARMUP,
+                                     skip=False)
+    skip = sim.simulate_stacked_grid(cfg, slices, p, a, N_CYCLES, WARMUP,
+                                     skip=True)
+    assert float(np.mean(skip[0]["sim_steps"])) < N_CYCLES
+    for (pol, ov), t, s in zip(slices, tick, skip):
+        _assert_equal(t, s, f"stacked skip {pol}@{ov}",
+                      skip_keys=("sim_steps",))
+
+
+# ---------------------------------------------------------------------------
+# schema guards
+# ---------------------------------------------------------------------------
+
+def test_period_knobs_rejected_as_value_overrides():
+    with pytest.raises(ValueError, match="period"):
+        Knobs.from_cfg(CFG, atlas_epoch=1500)
+    with pytest.raises(ValueError):
+        Knobs.from_cfg(CFG, not_a_knob=1)
+
+
+def test_split_overrides_partitions():
+    per, val = params.split_overrides(
+        {"atlas_epoch": 1500, "atlas_alpha": 0.75})
+    assert per == {"atlas_epoch": 1500} and val == {"atlas_alpha": 0.75}
+    with pytest.raises(ValueError):
+        params.split_overrides({"nope": 1})
+
+
+def test_sms_dash_not_stackable():
+    # configure_knobs is not the identity at any config -> per-policy path
+    assert not policy_api.is_stackable("sms_dash", CFG)
+    assert policy_api.is_stackable("frfcfs", CFG)

@@ -25,10 +25,10 @@ import numpy as np
 import pytest
 
 from repro import compat
-from repro.core import energy, engine, qos
+from repro.core import energy, engine, params, qos
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
-from repro.core.params import SimConfig
+from repro.core.params import Knobs, SimConfig
 from repro.core.schedulers import CentralizedPolicy
 
 CFG = SimConfig(n_cpu=3, n_gpu=1, n_channels=2, buf_entries=24, fifo_size=5,
@@ -138,6 +138,56 @@ def test_qos_accounting_adds_no_sorts_or_scatters():
         assert on == off, (
             f"{name}: QoS accounting changed sort/scatter/gather "
             f"population: {off} -> {on}")
+
+
+def _step_jaxpr_traced_knobs(policy_name, base_cfg=CFG):
+    """Per-cycle step with the knob point as a TRACED argument (the batched
+    design-grid path) instead of baked constants."""
+    bound, pol, carry = sim._init(base_cfg, policy_name)
+    pool = _dummy_pool(bound)
+    active = jnp.ones((bound.n_src,), bool)
+    base = bound.base
+
+    def step(carry, t, kn):
+        return policy_api.make_step(params.bind(base, kn), pol, pool,
+                                    active)(carry, t)
+
+    return jax.make_jaxpr(step)(carry, jnp.int32(5), Knobs.from_cfg(base))
+
+
+def _prim_counts(jx):
+    out = {}
+    for p, _ in _walk_prims(jx.jaxpr):
+        fam = next((f for f in ("sort", "scatter", "gather")
+                    if p.startswith(f)), None)
+        if fam:
+            out[fam] = out.get(fam, 0) + 1
+    return out
+
+
+@pytest.mark.parametrize("policy_name", ["frfcfs", "atlas", "parbs", "sms"])
+def test_knob_batching_adds_no_sorts_or_scatters(policy_name):
+    """Lifting knobs from baked trace constants to traced arrays (the
+    one-program design grid) must add ZERO sort/scatter/gather primitives
+    to the per-cycle jaxpr — knob reads are elementwise operands, never
+    indexing or ranking work."""
+    baked = _prim_counts(_step_jaxpr(policy_name))
+    traced = _prim_counts(_step_jaxpr_traced_knobs(policy_name))
+    assert traced == baked, (
+        f"{policy_name}: traced knobs changed sort/scatter/gather "
+        f"population: {baked} -> {traced}")
+
+
+@pytest.mark.parametrize("policy_name", ["atlas", "tcm"])
+def test_traced_knobs_keep_sorts_cond_gated(policy_name):
+    """The t-only boundary conds survive knob tracing: ranking sorts stay
+    behind cond in the traced-knob jaxpr (period knobs are per-slice static,
+    so the predicate stays unbatched)."""
+    jx = _step_jaxpr_traced_knobs(policy_name)
+    uncond = [p for p, in_cond in _walk_prims(jx.jaxpr)
+              if p in SORT_PRIMS and not in_cond]
+    assert not uncond, (
+        f"{policy_name}: knob tracing un-gated {len(uncond)} sort op(s)")
 
 
 def test_simspeed_bench_recorded_speedup_holds():
