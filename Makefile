@@ -7,7 +7,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed bench-qos \
-	bench-dse
+	bench-dse check-invariants
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -24,6 +24,14 @@ bench-smoke:
 
 bench-simspeed:
 	$(PY) -m benchmarks.simspeed
+
+# self-check gate: every policy runs with the invariant sanitizer armed
+# (ticked + variable-step + stacked) and must stay violation-free, then
+# every registered fault is injected and must be CAUGHT.
+# INVARIANTS_OUT: optional path for the violation-summary JSON artifact.
+check-invariants:
+	$(PY) -m benchmarks.check_invariants \
+		$(if $(INVARIANTS_OUT),--out $(INVARIANTS_OUT))
 
 # 3-class (CPU+GPU+HWA) QoS family: per-class deadline-met rate, tail
 # latency, and class-masked fairness across every registry policy

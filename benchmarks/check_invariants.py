@@ -1,0 +1,121 @@
+"""Self-check gate: run every registered policy with the invariant
+sanitizer armed and fail loudly on any violation.
+
+Two halves, both required for the gate to mean anything:
+
+  1. CLEAN: every policy in `sim.ALL_POLICIES` runs ticked AND under the
+     variable-step driver (plus the stackable family on the stacked path,
+     both modes) with `validate_enabled=True`; every violation counter
+     must stay zero.
+  2. ARMED: one registered fault per violation family is injected and
+     MUST be caught — a sanitizer that cannot flag a known-bad run is
+     reported as a failure, not a pass.
+
+Writes a violation-summary JSON (per-run counter breakdown, uploaded as a
+CI artifact via ``make check-invariants``) and exits nonzero on any clean
+violation or any undetected fault.
+
+Output convention: ``check_invariants,us_per_call,derived`` CSV row.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import faults, validate
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+
+
+def _check_pool(cfg):
+    """One representative 3-class workload row (deterministic)."""
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=1, seed=13,
+                            n_hwa=cfg.n_hwa)
+    pool, active = wl.pool_batch(cfg, wls[:1])
+    return ({k: np.asarray(v)[0] for k, v in pool.items()},
+            np.asarray(active)[0])
+
+
+def main(n_cycles: int = 1_200, out: str = None) -> int:
+    t0 = time.time()
+    cfg = common.parity_config(n_cpu=4, n_hwa=1).replace(
+        validate_enabled=True)
+    pool, active = _check_pool(cfg)
+    report = {"cache_version": common.CACHE_VERSION, "n_cycles": n_cycles,
+              "clean": {}, "faults": {}, "failures": []}
+
+    def record(section, name, summary, expect_zero, targets=()):
+        nz = {k: int(v) for k, v in summary.items() if v}
+        report[section][name] = nz
+        if expect_zero and nz:
+            report["failures"].append(f"{name}: unexpected violations {nz}")
+        if not expect_zero and not sum(summary[k] for k in targets):
+            report["failures"].append(
+                f"{name}: fault NOT caught (targets {targets}, "
+                f"counters {nz})")
+
+    # -- clean runs: all policies, ticked + skip ---------------------------
+    for pol in sim.ALL_POLICIES:
+        for skip in (False, True):
+            st = sim.simulate_debug(cfg, pol, pool, active,
+                                    n_cycles=n_cycles, skip=skip)
+            record("clean", f"{pol}/{'skip' if skip else 'tick'}",
+                   validate.summarize(np.asarray(st[2]["viol"])), True)
+    stackable = sim.stackable_names(cfg)
+    for skip in (False, True):
+        out_st = sim.simulate_debug_stacked(cfg, stackable, pool, active,
+                                            n_cycles=n_cycles, skip=skip)
+        for pol, (_, _, dram) in out_st.items():
+            record("clean",
+                   f"stacked/{pol}/{'skip' if skip else 'tick'}",
+                   validate.summarize(np.asarray(dram["viol"])), True)
+
+    # -- armed runs: every registered fault must be detected ---------------
+    idle = dict(pool)
+    idle["mpki"] = np.full_like(pool["mpki"], 0.5)
+    for name in faults.FAULTS:
+        targets = faults.TARGETS[name]
+        skip = name in faults.SKIP_ONLY
+        p = idle if skip else pool
+        with faults.inject(name):
+            if name in faults.STACKED_ONLY:
+                outs = sim.simulate_debug_stacked(
+                    cfg, ("frfcfs", "parbs"), p, active,
+                    n_cycles=n_cycles, skip=False)
+                summary = validate.summarize(
+                    np.asarray(outs["parbs"][2]["viol"]))
+            else:
+                st = sim.simulate_debug(cfg, "frfcfs", p, active,
+                                        n_cycles=n_cycles, skip=skip)
+                summary = validate.summarize(np.asarray(st[2]["viol"]))
+        record("faults", name, summary, False, targets)
+
+    ok = not report["failures"]
+    report["ok"] = ok
+    if out:
+        Path(out).parent.mkdir(parents=True, exist_ok=True)
+        Path(out).write_text(json.dumps(report, indent=1))
+    for f in report["failures"]:
+        print(f"FAIL: {f}", file=sys.stderr)
+    n_runs = len(report["clean"]) + len(report["faults"])
+    common.emit(
+        "check_invariants", (time.time() - t0) * 1e6 / max(n_runs, 1),
+        f"clean_runs={len(report['clean'])};faults={len(report['faults'])};"
+        f"failures={len(report['failures'])};"
+        f"gate={'pass' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-cycles", type=int, default=1_200)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the violation-summary JSON here")
+    args = ap.parse_args()
+    sys.exit(main(n_cycles=args.n_cycles, out=args.out))

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import sys
 import time
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence
@@ -32,6 +33,49 @@ from repro.core import workloads as wl
 from repro.core.params import SimConfig
 
 EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+
+# Bump when the result schema or the semantics behind cached numbers change
+# (new measured columns, metric definition changes, engine behavior fixes).
+# The version rides in every cache key — old entries become unreachable —
+# AND inside every saved JSON, so `_load_cached`/`evict_stale` can delete
+# stale files instead of leaving them to shadow fresh results forever.
+CACHE_VERSION = "pr9-validate"
+
+
+def _log_backoff(msg: str) -> None:
+    # recovery/degradation breadcrumbs go to stderr so the CSV contract on
+    # stdout stays machine-parsable
+    print(f"[sweep-recover] {msg}", file=sys.stderr)
+
+
+def _load_cached(path: Path, force: bool) -> Optional[Dict]:
+    """Parsed cache entry, or None. Corrupt and version-stale files are
+    EVICTED (deleted) on sight — a stale entry silently shadowing fresh
+    semantics is worse than a re-run."""
+    if not path.exists():
+        return None
+    try:
+        data = json.loads(path.read_text())
+        stale = data.get("cache_version") != CACHE_VERSION
+    except (json.JSONDecodeError, OSError):
+        data, stale = None, True
+    if stale:
+        _log_backoff(f"evicting stale/corrupt cache entry {path.name}")
+        path.unlink(missing_ok=True)
+        return None
+    return None if force else data
+
+
+def evict_stale() -> List[str]:
+    """Sweep experiments/sim/ and delete every cache entry whose embedded
+    version is not CACHE_VERSION (or that fails to parse). Returns the
+    evicted file names."""
+    gone = []
+    if EXP_DIR.is_dir():
+        for path in sorted(EXP_DIR.glob("*.json")):
+            if _load_cached(path, force=True) is None and not path.exists():
+                gone.append(path.name)
+    return gone
 
 
 def __getattr__(name: str):
@@ -71,7 +115,7 @@ def _key(cfg: SimConfig, policy: str, tag: str, n_cycles: int,
     # hash the RESOLVED config AND knob point: a variant policy (e.g.
     # sms_dash, whose configure_knobs pins dash=True) can never collide
     # with its base under any cache-sharing scheme
-    blob = json.dumps([repr(resolved_config(cfg, policy)),
+    blob = json.dumps([CACHE_VERSION, repr(resolved_config(cfg, policy)),
                        sorted(resolved_knobs(cfg, policy).items()),
                        policy, tag, n_cycles, warmup, seed, n_per_cat],
                       sort_keys=True)
@@ -80,7 +124,7 @@ def _key(cfg: SimConfig, policy: str, tag: str, n_cycles: int,
 
 def _alone_key(cfg: SimConfig, policy: str, n_cycles: int,
                warmup: int) -> str:
-    blob = json.dumps([repr(resolved_config(cfg, policy)),
+    blob = json.dumps([CACHE_VERSION, repr(resolved_config(cfg, policy)),
                        sorted(resolved_knobs(cfg, policy).items()),
                        policy, n_cycles, warmup], sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
@@ -90,9 +134,8 @@ def _load_alone(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
                 force: bool) -> Optional[Dict[str, float]]:
     path = EXP_DIR / \
         f"alone_{policy}_{_alone_key(cfg, policy, n_cycles, warmup)}.json"
-    if path.exists() and not force:
-        return json.loads(path.read_text())
-    return None
+    data = _load_cached(path, force)
+    return None if data is None else data["alone"]
 
 
 def _save_alone(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
@@ -100,7 +143,8 @@ def _save_alone(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
     path = EXP_DIR / \
         f"alone_{policy}_{_alone_key(cfg, policy, n_cycles, warmup)}.json"
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(alone, indent=1))
+    path.write_text(json.dumps({"cache_version": CACHE_VERSION,
+                                "alone": alone}, indent=1))
 
 
 def _stacked_fetch(dev, idx: int, box: Dict):
@@ -117,10 +161,70 @@ def _stacked_fetch(dev, idx: int, box: Dict):
     return fetch
 
 
+def _chunked_run(cfg: SimConfig, polname: str, point: Optional[Dict],
+                 batch_pool: Dict[str, np.ndarray],
+                 batch_active: np.ndarray, n_cycles: int,
+                 warmup: int) -> Dict[str, np.ndarray]:
+    """Last rung of the degradation ladder: run the batch one workload row
+    at a time (same compiled program reused across rows) and concatenate.
+    Isolates a poisoned row — every healthy row still yields its metrics.
+    `point` carries value-knob overrides for grid slices (None = defaults).
+    """
+    W = batch_active.shape[0]
+    outs = []
+    for i in range(W):
+        row_pool = {k: v[i:i + 1] for k, v in batch_pool.items()}
+        row_act = batch_active[i:i + 1]
+        if point is None:
+            m = sim.simulate(cfg, polname, row_pool, row_act, n_cycles,
+                             warmup)
+            outs.append({k: np.asarray(v) for k, v in m.items()})
+        else:
+            m = sim.simulate_grid(cfg, polname, [point], row_pool, row_act,
+                                  n_cycles, warmup)
+            outs.append({k: np.asarray(v)[:, 0] for k, v in m.items()})
+    return {k: np.concatenate([o[k] for o in outs]) for k in outs[0]}
+
+
+def _fetch_recover(cfg: SimConfig, polname: str, label: str,
+                   point: Optional[Dict], fetch,
+                   batch_pool: Dict[str, np.ndarray],
+                   batch_active: np.ndarray, n_cycles: int, warmup: int,
+                   strict: bool) -> Dict[str, np.ndarray]:
+    """Degradation ladder below the (possibly shared) async fetch: retry
+    the slice as its own synchronous dispatch, then one workload row at a
+    time. `strict` re-raises at the first failure instead of degrading.
+    `fetch=None` means the dispatch itself already failed upstream."""
+    if fetch is not None:
+        try:
+            return fetch()
+        except Exception as e:
+            if strict:
+                raise
+            _log_backoff(f"{label}: batched fetch failed ({e!r}); "
+                         f"retrying as a solo dispatch")
+    try:
+        if point is None:
+            m = sim.simulate(cfg, polname, batch_pool, batch_active,
+                             n_cycles, warmup)
+            return {k: np.asarray(v) for k, v in m.items()}
+        m = sim.simulate_grid(cfg, polname, [point], batch_pool,
+                              batch_active, n_cycles, warmup)
+        return {k: np.asarray(v)[:, 0] for k, v in m.items()}
+    except Exception as e:
+        if strict:
+            raise
+        _log_backoff(f"{label}: solo dispatch failed ({e!r}); "
+                     f"retrying per-workload chunks")
+    return _chunked_run(cfg, polname, point, batch_pool, batch_active,
+                        n_cycles, warmup)
+
+
 def run_sweep(cfg: SimConfig, policies: Sequence[str],
               workloads: Sequence[wl.Workload], n_cycles: int = 16_000,
               warmup: int = 2_000, seed: int = 7, tag: str = "",
-              force: bool = False, stacked: bool = True) -> Dict[str, Dict]:
+              force: bool = False, stacked: bool = True,
+              strict: bool = False) -> Dict[str, Dict]:
     """Alone-normalized per-workload metrics for each policy (cached).
 
     Uncached policies that opt into the stacked execution path (the
@@ -133,6 +237,13 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
     into the same batch as the workload rows: one compile + one dispatch
     either way. `stacked=False` forces the per-policy path everywhere
     (benchmarks/simspeed.py uses it to measure the stacking win).
+
+    Fault tolerance: a failing slice degrades down a logged ladder —
+    stacked batch halved recursively, then per-policy dispatch, then
+    per-workload chunks — and, if everything fails, lands in the result
+    dict as ``{"policy": ..., "error": ...}`` (never cached, so a re-run
+    retries it) while every healthy slice is persisted per-slice as it
+    completes. `strict=True` re-raises at the first failure instead.
     """
     apool, aactive, amap = wl.alone_batch(cfg)
     n_alone = len(amap)
@@ -143,8 +254,9 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         key = _key(cfg, pol, tag or "std", n_cycles, warmup, seed,
                    len(workloads))
         path = EXP_DIR / f"{pol}_{key}.json"
-        if path.exists() and not force:
-            results[pol] = json.loads(path.read_text())
+        cached = _load_cached(path, force)
+        if cached is not None:
+            results[pol] = cached
             continue
         todo.append((pol, path, _load_alone(cfg, pol, n_cycles, warmup,
                                             force)))
@@ -170,28 +282,68 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
                     np.concatenate([aactive, active]))
         return pool, active
 
-    pending = []                        # (pol, path, alone, fetch)
-    for need_alone, items in groups.items():
-        batch_pool, batch_active = batch_for(need_alone)
-        dev = sim.simulate_stacked_async(
-            cfg, tuple(p for p, _, _ in items), batch_pool, batch_active,
-            n_cycles, warmup)
+    pending = []                # (pol, path, alone, fetch, bpool, bactive)
+
+    def solo_dispatch(item):
+        pol, path, alone = item
+        bp, ba = batch_for(alone is None)
+        try:
+            dev = sim.simulate_async(cfg, pol, bp, ba, n_cycles, warmup)
+            fetch = lambda dev=dev: {k: np.asarray(v)
+                                     for k, v in dev.items()}
+        except Exception as e:
+            if strict:
+                raise
+            _log_backoff(f"{pol}: async dispatch failed ({e!r}); "
+                         f"deferring to the sync fallback ladder")
+            fetch = None
+        pending.append((pol, path, alone, fetch, bp, ba))
+
+    def stacked_dispatch(items, need_alone):
+        # ladder rung 1: a failing stacked trace/compile halves the batch
+        # recursively until the culprit is isolated on the solo path
+        if len(items) == 1:
+            solo_dispatch(items[0])
+            return
+        bp, ba = batch_for(need_alone)
+        try:
+            dev = sim.simulate_stacked_async(
+                cfg, tuple(p for p, _, _ in items), bp, ba, n_cycles,
+                warmup)
+        except Exception as e:
+            if strict:
+                raise
+            h = len(items) // 2
+            _log_backoff(
+                f"stacked dispatch {[p for p, _, _ in items]} failed "
+                f"({e!r}); halving to {h}+{len(items) - h}")
+            stacked_dispatch(items[:h], need_alone)
+            stacked_dispatch(items[h:], need_alone)
+            return
         box: Dict = {}
         for idx, (pol, path, alone) in enumerate(items):
-            pending.append((pol, path, alone, _stacked_fetch(dev, idx, box)))
-    for pol, path, alone in singles:
-        batch_pool, batch_active = batch_for(alone is None)
-        dev = sim.simulate_async(cfg, pol, batch_pool, batch_active,
-                                 n_cycles, warmup)
-        pending.append((pol, path, alone,
-                        lambda dev=dev: {k: np.asarray(v)
-                                         for k, v in dev.items()}))
-    for pol, path, alone, fetch in pending:
+            pending.append((pol, path, alone,
+                            _stacked_fetch(dev, idx, box), bp, ba))
+
+    for need_alone, items in groups.items():
+        stacked_dispatch(items, need_alone)
+    for item in singles:
+        solo_dispatch(item)
+    for pol, path, alone, fetch, bp, ba in pending:
         # elapsed_s = this policy's block + post-process segment only; the
         # dispatch/compile phase overlaps across policies and is reported
         # by benchmarks/simspeed.py as sweep wall-clock
         t0 = time.time()
-        m = fetch()                                      # blocks this policy
+        try:
+            m = _fetch_recover(cfg, pol, pol, None, fetch, bp, ba,
+                               n_cycles, warmup, strict)
+        except Exception as e:
+            if strict:
+                raise
+            _log_backoff(f"{pol}: ladder exhausted ({e!r}); "
+                         f"recording error entry (not cached)")
+            results[pol] = {"policy": pol, "error": repr(e)}
+            continue
         if alone is None:
             am = {k: v[:n_alone] for k, v in m.items()}
             m = {k: v[n_alone:] for k, v in m.items()}
@@ -208,6 +360,7 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
                 r.update({k: float(v[i]) for k, v in qb.items()})
         out = {
             "policy": pol,
+            "cache_version": CACHE_VERSION,
             "elapsed_s": round(time.time() - t0, 1),
             "alone": alone,
             "rows": rows,
@@ -233,7 +386,7 @@ def run_policy(cfg: SimConfig, policy: str, workloads: Sequence[wl.Workload],
 
 def _grid_key(cfg: SimConfig, policy: str, overrides: Dict, tag: str,
               n_cycles: int, warmup: int, seed: int, n_wl: int) -> str:
-    blob = json.dumps([repr(resolved_config(cfg, policy)),
+    blob = json.dumps([CACHE_VERSION, repr(resolved_config(cfg, policy)),
                        sorted(resolved_knobs(cfg, policy).items()),
                        policy, sorted(overrides.items()), tag,
                        n_cycles, warmup, seed, n_wl],
@@ -243,7 +396,8 @@ def _grid_key(cfg: SimConfig, policy: str, overrides: Dict, tag: str,
 
 def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
              n_cycles: int = 16_000, warmup: int = 2_000, seed: int = 7,
-             tag: str = "grid", force: bool = False) -> Dict[str, Dict]:
+             tag: str = "grid", force: bool = False,
+             strict: bool = False) -> Dict[str, Dict]:
     """Alone-normalized metrics for a (policy x knob-variant) grid (cached).
 
     `specs` is a sequence of (policy, label, knob_overrides) triples;
@@ -257,6 +411,10 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
     normalization measured at its own knob point.
 
     Returns {label: result}, parallel to specs; labels must be unique.
+    Failing slices degrade down the same logged ladder as `run_sweep`
+    (halve the stacked grid, solo dispatch, per-workload chunks) and end
+    as uncached ``{"policy", "label", "error"}`` entries unless
+    `strict=True`, which re-raises at the first failure.
     """
     specs = [(p, lab, dict(ov)) for p, lab, ov in specs]
     labels = [lab for _, lab, _ in specs]
@@ -274,8 +432,9 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
         key = _grid_key(cfg, polname, ov, tag, n_cycles, warmup, seed,
                         len(workloads))
         path = EXP_DIR / f"grid_{polname}_{key}.json"
-        if path.exists() and not force:
-            results[label] = json.loads(path.read_text())
+        cached = _load_cached(path, force)
+        if cached is not None:
+            results[label] = cached
         else:
             todo.append((polname, label, ov, path))
 
@@ -286,13 +445,31 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
     stacked_items = [it for it in todo if _stackable(it)]
     singles = [it for it in todo if not _stackable(it)]
     pending = []
-    if len(stacked_items) >= 2:
-        dev = sim.simulate_stacked_grid_async(
-            cfg, [(p, ov) for p, _, ov, _ in stacked_items],
-            batch_pool, batch_active, n_cycles, warmup)
+
+    def stacked_dispatch(items):
+        if len(items) == 1:
+            singles.append(items[0])
+            return
+        try:
+            dev = sim.simulate_stacked_grid_async(
+                cfg, [(p, ov) for p, _, ov, _ in items],
+                batch_pool, batch_active, n_cycles, warmup)
+        except Exception as e:
+            if strict:
+                raise
+            h = len(items) // 2
+            _log_backoff(
+                f"stacked grid dispatch {[it[1] for it in items]} failed "
+                f"({e!r}); halving to {h}+{len(items) - h}")
+            stacked_dispatch(items[:h])
+            stacked_dispatch(items[h:])
+            return
         box: Dict = {}
-        for idx, it in enumerate(stacked_items):
+        for idx, it in enumerate(items):
             pending.append((it, _stacked_fetch(dev, idx, box)))
+
+    if len(stacked_items) >= 2:
+        stacked_dispatch(stacked_items)
     else:
         singles = stacked_items + singles
     by_group: Dict[tuple, list] = {}
@@ -303,15 +480,35 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
     for (polname, per), items in by_group.items():
         gcfg = cfg.replace(**dict(per))
         points = [params.split_overrides(it[2])[1] for it in items]
-        dev = sim.simulate_grid_async(gcfg, polname, points, batch_pool,
-                                      batch_active, n_cycles, warmup)
-        box = {}
-        for idx, it in enumerate(items):
-            pending.append((it, _stacked_fetch(dev, idx, box)))
+        try:
+            dev = sim.simulate_grid_async(gcfg, polname, points, batch_pool,
+                                          batch_active, n_cycles, warmup)
+            box = {}
+            for idx, it in enumerate(items):
+                pending.append((it, _stacked_fetch(dev, idx, box)))
+        except Exception as e:
+            if strict:
+                raise
+            _log_backoff(f"grid group {[it[1] for it in items]} dispatch "
+                         f"failed ({e!r}); deferring to the fallback "
+                         f"ladder")
+            pending.extend((it, None) for it in items)
 
     for (polname, label, ov, path), fetch in pending:
         t0 = time.time()
-        m = fetch()
+        per, point = params.split_overrides(ov)
+        try:
+            m = _fetch_recover(cfg.replace(**per), polname, label, point,
+                               fetch, batch_pool, batch_active, n_cycles,
+                               warmup, strict)
+        except Exception as e:
+            if strict:
+                raise
+            _log_backoff(f"{label}: ladder exhausted ({e!r}); "
+                         f"recording error entry (not cached)")
+            results[label] = {"policy": polname, "label": label,
+                              "error": repr(e)}
+            continue
         am = {k: v[:n_alone] for k, v in m.items()}
         m = {k: v[n_alone:] for k, v in m.items()}
         alone = wl.alone_perf_lookup(cfg, am, amap)
@@ -326,6 +523,7 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
             "policy": polname,
             "label": label,
             "overrides": ov,
+            "cache_version": CACHE_VERSION,
             "elapsed_s": round(time.time() - t0, 1),
             "alone": alone,
             "rows": rows,
@@ -349,6 +547,11 @@ def fmt_cat_table(results: Dict[str, Dict], metric: str) -> str:
     cats = list(wl.CATEGORIES)
     lines = ["policy," + ",".join(cats) + ",avg"]
     for pol, res in results.items():
+        if "error" in res:
+            # tolerant-mode failure entry: keep the row so the partial
+            # report stays parallel to the request, but mark it plainly
+            lines.append(pol + ",ERROR:" + res["error"].replace(",", ";"))
+            continue
         vals = [res["by_category"].get(c, {}).get(metric, float("nan"))
                 for c in cats]
         lines.append(pol + "," + ",".join(f"{v:.3f}" for v in vals) +

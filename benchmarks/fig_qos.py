@@ -19,6 +19,7 @@ Output convention: ``fig_qos,us_per_call,derived`` CSV row after the table.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -42,26 +43,30 @@ COLUMNS = ("dl_met_rate", "lat_p99_cpu", "lat_p99_hwa", "cpu_max_slowdown",
 
 
 def main(n_per_cat: int = 4, n_cycles: int = 12_000,
-         force: bool = False) -> dict:
+         force: bool = False, strict: bool = False) -> dict:
     t0 = time.time()
     cfg = qos_config()
     wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat, seed=13,
                             n_hwa=cfg.n_hwa)
     policies = list(common.POLICIES)
     results = common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
-                               tag="qos", force=force)
+                               tag="qos", force=force, strict=strict)
 
     hwa = met.class_vector(cfg) == CLS_HWA
     print("policy," + ",".join(COLUMNS) + ",urgent_admits")
     urgents = {}
     for pol, res in results.items():
+        if "error" in res:
+            print(f"{pol},ERROR:{res['error']}")
+            continue
         ua = float(np.asarray(res["measured"].get(
             "urgent_admits", np.zeros(cfg.n_src)))[hwa].sum())
         urgents[pol] = ua
         vals = [res["agg"][c] for c in COLUMNS]
         print(pol + "," + ",".join(f"{v:.3f}" for v in vals) + f",{ua:.0f}")
 
-    best = max(results, key=lambda p: results[p]["agg"]["dl_met_rate"])
+    healthy = {p: r for p, r in results.items() if "error" not in r}
+    best = max(healthy, key=lambda p: healthy[p]["agg"]["dl_met_rate"])
     us = (time.time() - t0) * 1e6 / max(len(policies), 1)
     common.emit(
         "fig_qos", us,
@@ -72,4 +77,13 @@ def main(n_per_cat: int = 4, n_cycles: int = 12_000,
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--strict", dest="strict", action="store_true",
+                    help="re-raise on the first failing sweep slice")
+    ap.add_argument("--tolerant", dest="strict", action="store_false",
+                    help="degrade failing slices and report the healthy "
+                         "remainder (default)")
+    ap.set_defaults(strict=False)
+    args = ap.parse_args()
+    main(force=args.force, strict=args.strict)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, qos
+from repro.core import energy, qos, validate
 from repro.core.params import (CLS_CPU, CLS_GPU, CLS_HWA, SimConfig,
                                SourcePool)
 
@@ -160,6 +160,8 @@ def dram_state(cfg: SimConfig) -> Dict[str, Any]:
         **energy.energy_state(cfg),
         # QoS latency histogram (empty dict when cfg.qos_enabled is off)
         **qos.qos_state(cfg),
+        # invariant-sanitizer counters (empty when cfg.validate_enabled off)
+        **validate.validate_state(cfg),
     }
 
 
@@ -448,6 +450,10 @@ def issue_channels(cfg: SimConfig, dram: Dict[str, Any], st: Dict[str, Any],
     tm = cfg.timing
     dram = dict(dram)
     st = dict(st)
+    if cfg.validate_enabled:
+        # timing compliance is checked against the PRE-update DRAM state
+        dram["viol"] = dram["viol"] + validate.issue_counts(
+            cfg, dram, do_issue, bank, lat, is_hit, t)
     done = t + lat + tm.t_burst                                 # (C,)
     dram["bank_free"] = masked_set(dram["bank_free"], bank, done, do_issue)
     dram["open_row"] = masked_set(dram["open_row"], bank, row, do_issue)

@@ -1,0 +1,178 @@
+"""Deterministic fault injection for the invariant sanitizer.
+
+Each injector perturbs exactly one contract the sanitizer
+(`repro.core.validate`) guards, by temporarily monkeypatching the module
+attribute the hot loop resolves at trace time. The point is falsifiable
+self-checking: a sanitizer that never fires on a healthy run proves
+nothing unless each violation class is ALSO shown to fire under a fault
+engineered to break it (tests/test_validate.py drives every registered
+fault through this harness and asserts its targeted counters flip).
+
+Injection contract:
+
+  * `inject(name)` is a context manager — patch on entry, restore on exit,
+    exception-safe. Faults are pure attribute swaps; no global state
+    outside the `with` block.
+  * Patched callables are resolved at TRACE time, so injected runs must
+    build fresh programs: use `simulator.simulate_debug` /
+    `simulate_debug_stacked` (fresh `jax.jit` per call), never the cached
+    `_sim_batch` dispatchers — a cached healthy trace would silently
+    bypass the fault.
+  * Injectors never touch `engine.lcg_skip` or other primitives the
+    sanitizer itself calls: the checker must keep an independent view of
+    ground truth, or the fault would cancel out of the comparison.
+
+Registered faults (TARGETS maps each to the violation counters it must
+trip; `skip_only` faults corrupt span machinery and need a variable-step
+run to manifest):
+
+  late_witness        source-event witness returns 16 cycles late, so the
+                      driver jumps past wake-ups     -> late_source/...
+  dropped_completion  completion ring slot zeroed before return-to-source,
+                      requests vanish in flight      -> flow_conserve
+  double_issue        issue mask forced on regardless of eligibility,
+                      commands land on busy banks    -> busy_bank/...
+  rng_skew            closed-form rng fast-forward off by one step per
+                      span (the classic skip bug)    -> rng_stream
+  stacked_writeset    "msub" dropped from PAR-BS's declared stacked
+                      write-set, counter silently desyncs -> occupancy
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import engine, policy as policy_api, schedulers
+
+# violation counters each fault must flip (asserted by tests; a fault may
+# also trip collateral counters — e.g. forced issues corrupt conservation
+# too — but at least one target must fire)
+TARGETS: Dict[str, Tuple[str, ...]] = {
+    "late_witness": ("late_source", "late_boundary", "late_admission",
+                     "late_issue"),
+    "dropped_completion": ("flow_conserve",),
+    "double_issue": ("busy_bank", "bus_conflict", "tfaw"),
+    "rng_skew": ("rng_stream",),
+    "stacked_writeset": ("occupancy",),
+}
+
+# faults that corrupt the variable-step span machinery: a ticked run never
+# exercises the broken path, so drivers must run with skip=True
+SKIP_ONLY = ("late_witness", "rng_skew")
+
+# faults that live on the stacked multi-policy path only
+STACKED_ONLY = ("stacked_writeset",)
+
+
+@contextlib.contextmanager
+def _patched(obj, attr, value):
+    orig = getattr(obj, attr)
+    setattr(obj, attr, value)
+    try:
+        yield
+    finally:
+        setattr(obj, attr, orig)
+
+
+# ---------------------------------------------------------------------------
+# injectors — each returns a context manager
+# ---------------------------------------------------------------------------
+
+def _late_witness():
+    """Source-event witness reports 16 cycles later than truth, so the
+    skip driver trusts a span that contains real wake-ups. The span
+    auditor's would-fire probes at u = t_new - 1 must catch it."""
+    orig = engine.next_source_event
+
+    def skewed(cfg, pool, st, active, t):
+        return orig(cfg, pool, st, active, t) + jnp.int32(16)
+
+    return _patched(engine, "next_source_event", skewed)
+
+
+def _dropped_completion():
+    """Zero the completion ring slot before it returns to its source:
+    the request was emitted and issued but never completes, so in-flight
+    flow conservation (outstanding vs pend+queued+ring) breaks."""
+    orig = engine.completions_tick
+
+    def dropping(st, dram, t):
+        dram = dict(dram)
+        dram["ring"] = dram["ring"].at[jnp.mod(t, engine.RING)].set(0)
+        return orig(st, dram, t)
+
+    return _patched(engine, "completions_tick", dropping)
+
+
+def _double_issue():
+    """Force the per-channel issue mask on by handing `issue_picked` the
+    absolute score: ineligible picks (score < 0 encodes 'no legal
+    candidate') get committed anyway, landing commands on busy banks,
+    conflicting bus slots, and past the tFAW activate budget."""
+    orig = schedulers.issue_picked
+
+    def forced(cfg, st, buf, dram, score, lat, is_hit, t):
+        return orig(cfg, st, buf, dram, jnp.abs(score), lat, is_hit, t)
+
+    return _patched(schedulers, "issue_picked", forced)
+
+
+def _rng_skew():
+    """Advance the source rng by one extra step per skipped span — the
+    canonical closed-form fast-forward off-by-one. The stream checker
+    (rng must equal lcg_skip(rng0, 2(t+1)) at every real cycle) fires at
+    the first post-span tick."""
+    orig = engine.skip_sources
+
+    def skewed(cfg, pool, st, active, k):
+        st = orig(cfg, pool, st, active, k)
+        st = dict(st)
+        extra, _ = engine.lcg_step(st["rng"])
+        st["rng"] = jnp.where(k > 0, extra, st["rng"])
+        return st
+
+    return _patched(engine, "skip_sources", skewed)
+
+
+def _stacked_writeset():
+    """Drop "msub" from PAR-BS's declared stacked write-sets. The stacked
+    step only re-stacks declared keys, so the hook's updates to the
+    would-be-marked counter are silently discarded and the mirror-counter
+    recount in `check_invariants` desyncs (occupancy class)."""
+    pol = policy_api.POLICY_REGISTRY.get("parbs")
+    tick = tuple(k for k in pol.stacked_tick_keys if k != "msub")
+    issue = tuple(k for k in pol.stacked_issue_keys if k != "msub")
+
+    @contextlib.contextmanager
+    def ctx():
+        # instance attributes shadow the class declaration; delete to restore
+        pol.stacked_tick_keys = tick
+        pol.stacked_issue_keys = issue
+        try:
+            yield
+        finally:
+            del pol.stacked_tick_keys
+            del pol.stacked_issue_keys
+
+    return ctx()
+
+
+FAULTS = {
+    "late_witness": _late_witness,
+    "dropped_completion": _dropped_completion,
+    "double_issue": _double_issue,
+    "rng_skew": _rng_skew,
+    "stacked_writeset": _stacked_writeset,
+}
+
+assert set(FAULTS) == set(TARGETS)
+
+
+def inject(name: str):
+    """Context manager arming fault `name` (see FAULTS). Deterministic:
+    same fault + same run -> same violation counters."""
+    if name not in FAULTS:
+        raise KeyError(f"unknown fault {name!r}; known: {sorted(FAULTS)}")
+    return FAULTS[name]()

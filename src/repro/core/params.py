@@ -117,6 +117,12 @@ class SimConfig:
     # histogram maintained at issue time. Measurement-only, same contract as
     # energy: flipping `qos_enabled` cannot change a scheduling decision.
     qos_enabled: bool = True
+    # per-cycle invariant sanitizer (repro.core.validate): DRAM timing
+    # compliance, conservation laws, and skip-witness lateness audits,
+    # accumulated as int32 violation counters in dram_state. Measurement-
+    # only like energy/qos — flipping `validate_enabled` cannot change a
+    # scheduling decision, and OFF adds zero primitives to the hot loop.
+    validate_enabled: bool = False
     lat_bins: int = 32               # histogram bins per source
     lat_bin_width: int = 64          # cycles per bin (last bin open-ended):
                                      # 2048-cycle range covers the queueing

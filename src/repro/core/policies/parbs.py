@@ -127,6 +127,28 @@ class PARBS(CentralizedPolicy):
         return buf["marked"].astype(jnp.int32) * POL_BIT + \
             super().score(cfg, pool, buf, is_hit, t)
 
+    def check_invariants(self, cfg, pool, st, buf, t):
+        # base buffer invariants + the two PAR-BS mirror counters: `grank`
+        # must equal a pairwise age-rank recount within each (source, bank)
+        # group (births are distinct within a group, so strict-< is exact),
+        # and `msub` must equal a recount of the would-be-marked set. This
+        # is the check the corrupted-write-set fault trips on the stacked
+        # path: dropping `msub` from the declared keys desyncs the counter.
+        bad = super().check_invariants(cfg, pool, st, buf, t)
+        v = buf["valid"]
+        same = v[:, :, None] & v[:, None, :] & \
+            (buf["src"][:, :, None] == buf["src"][:, None, :]) & \
+            (buf["bank"][:, :, None] == buf["bank"][:, None, :])
+        older = same & (buf["birth"][:, None, :] < buf["birth"][:, :, None])
+        rank = jnp.sum(older, axis=2).astype(jnp.int32)
+        bad += jnp.sum((v & (rank != buf["grank"])).astype(jnp.int32))
+        below = v & (buf["grank"] < cfg.parbs_cap)
+        cnt = jnp.sum(((jnp.arange(cfg.n_src)[None, None, :]
+                        == buf["src"][:, :, None]) &
+                       below[:, :, None]).astype(jnp.int32), axis=(0, 1))
+        bad += jnp.sum((cnt != buf["msub"]).astype(jnp.int32))
+        return bad
+
     def next_boundary(self, cfg, pool, st, buf, t):
         # pre_tick mutates state next cycle iff deferred decrements are
         # pending or a fresh batch would form; otherwise every term it

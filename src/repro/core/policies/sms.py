@@ -9,6 +9,8 @@ on plain "sms" without touching the registry at all.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import policy, sms as sms_lib
 
 
@@ -40,6 +42,16 @@ class SMS:
 
     def on_skip(self, cfg, sched, k):
         return sms_lib.skip_cycles(sched, k)
+
+    # -- invariant-sanitizer hooks (repro.core.validate) --------------------
+    def queued_requests(self, cfg, sched):
+        return jnp.sum(sched["f_len"]) + jnp.sum(sched["d_len"])
+
+    def check_invariants(self, cfg, pool, st, sched, t):
+        return sms_lib.check_invariants(cfg, sched, t)
+
+    def audit_skip(self, cfg, pool, st, sched, dram, t, t_new):
+        return sms_lib.audit_skip(cfg, st, sched, dram, t, t_new)
 
 
 @policy.register

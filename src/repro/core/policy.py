@@ -43,7 +43,7 @@ from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, engine, params
+from repro.core import energy, engine, params, validate
 from repro.core.params import Knobs, SimConfig
 
 
@@ -200,6 +200,11 @@ def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
         st = engine.source_tick(cfg, pool, st, active, t)
         st, sched = pol.tick(cfg, pool, st, sched, t)
         st, sched, dram = pol.select(cfg, pool, st, sched, dram, t)
+        if cfg.validate_enabled:
+            # conservation laws hold as end-of-cycle identities
+            dram = dict(dram)
+            dram["viol"] = dram["viol"] + validate.tick_counts(
+                cfg, pool, pol, st, sched, dram, t)
         return (st, sched, dram), None
 
     return step
@@ -234,6 +239,11 @@ def make_skip_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
         dram = energy.skip_accrue(cfg, dram, t, t_new)
         if on_skip is not None:
             sched = on_skip(cfg, sched, k)
+        if cfg.validate_enabled:
+            # lateness audit of the jumped span, on post-accrual state
+            dram = dict(dram)
+            dram["viol"] = dram["viol"] + validate.span_counts(
+                cfg, pool, pol, st, sched, dram, active, t, t_new)
         return (st, sched, dram), t_new
 
     return skip_body

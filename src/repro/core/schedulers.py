@@ -46,7 +46,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy, engine, params
+from repro.core import energy, engine, params, validate
 from repro.core.params import SimConfig
 
 AGE_CAP = (1 << 14) - 1
@@ -223,6 +223,48 @@ class CentralizedPolicy:
         if nb is not None:
             te = jnp.minimum(te, nb)
         return te
+
+    # -- invariant-sanitizer hooks (repro.core.validate; measurement-only,
+    # traced only when cfg.validate_enabled — see ROADMAP "Validation &
+    # fault-injection contract") ------------------------------------------
+    def queued_requests(self, cfg: SimConfig, buf):
+        """Requests held in policy structures (total-flow conservation)."""
+        return jnp.sum(buf["valid"].astype(jnp.int32))
+
+    def check_invariants(self, cfg: SimConfig, pool, st, buf, t):
+        """Count of violated buffer invariants: the `gpu_occ` mirror counter
+        matches a recount of GPU-held entries, occupancy stays within
+        [0, E], and marks only sit on valid entries. Subclasses extend with
+        their own mirror-counter recounts (e.g. PAR-BS `msub`/`grank`)."""
+        occ = jnp.sum((buf["valid"] & pool["is_gpu"][buf["src"]])
+                      .astype(jnp.int32), axis=1)
+        bad = jnp.sum((occ != buf["gpu_occ"]).astype(jnp.int32))
+        bad += jnp.sum(((buf["gpu_occ"] < 0) |
+                        (buf["gpu_occ"] > cfg.buf_entries)).astype(jnp.int32))
+        bad += jnp.sum((buf["marked"] & ~buf["valid"]).astype(jnp.int32))
+        return bad
+
+    def audit_skip(self, cfg: SimConfig, pool, st, buf, dram, t, t_new):
+        """Would-fire lateness predicates for a jumped span: independent
+        inline re-derivations of admission/issue readiness (never the
+        witness formulas themselves), evaluated at the last skipped cycle
+        `u` — valid because readiness is monotone in t over frozen span
+        state. `next_boundary` is safe to reuse: it was evaluated at t by
+        the driver, so `nb < t_new` can only mean the driver ignored it."""
+        u = t_new - 1
+        skipped = t_new - t > 1
+        ch = engine.channel_of(cfg, st["pend_bank"])
+        gpu_ok = buf["gpu_occ"] < cfg.gpu_cap
+        has_free = ~jnp.all(buf["valid"], axis=1)
+        adm = jnp.any(st["pend_valid"] & has_free[ch] &
+                      (gpu_ok[ch] | ~pool["is_gpu"]))
+        elig, _, _ = eligibility_grid(cfg, buf, dram, u)
+        out = {"late_admission": (skipped & adm).astype(jnp.int32),
+               "late_issue": (skipped & jnp.any(elig)).astype(jnp.int32)}
+        nb = self.next_boundary(cfg, pool, st, buf, t)
+        if nb is not None:
+            out["late_boundary"] = (skipped & (nb < t_new)).astype(jnp.int32)
+        return out
 
     # -- MemoryPolicy protocol ---------------------------------------------
     def configure(self, cfg: SimConfig) -> SimConfig:
@@ -484,6 +526,15 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active, cfgs=None,
                              for k in issue_union}}
         buf = vP(lambda b, d, pk, sr: clear_picked(cfg, pool, b, d, pk, sr)
                  )(buf, do, pick, src)
+        if cfg.validate_enabled:
+            # conservation laws dispatch per slice like the other hooks
+            # (policy invariants differ per policy object)
+            vio = jnp.stack([
+                _slice_tree(dram, i)["viol"] + validate.tick_counts(
+                    cfgs[i], pool, p, _slice_tree(st, i),
+                    _slice_tree(buf, i), _slice_tree(dram, i), t)
+                for i, p in enumerate(pols)])
+            dram = {**dram, "viol": vio}
         return (st, buf, dram), None
 
     return step
@@ -541,6 +592,14 @@ def make_stacked_skip_step(cfg: SimConfig, pols, pool, active, cfgs=None,
         else:
             dram = vP(lambda d, kn: energy.skip_accrue(
                 params.bind(cfg, kn), d, t, t_new))(dram, knobs)
+        if cfg.validate_enabled:
+            vio = jnp.stack([
+                _slice_tree(dram, i)["viol"] + validate.span_counts(
+                    cfgs[i], pool, p, _slice_tree(st, i),
+                    _slice_tree(buf, i), _slice_tree(dram, i), active,
+                    t, t_new)
+                for i, p in enumerate(pols)])
+            dram = {**dram, "viol": vio}
         return (st, buf, dram), t_new
 
     return skip_body

@@ -145,6 +145,11 @@ def _scan_and_measure(cfg: SimConfig, step, skip_body, carry, n_cycles: int,
     }
     if qos_on:
         out["lat_hist"] = d("lat_hist")               # (S, BINS) counts
+    if "viol" in dram_f:
+        # sanitizer counters are CUMULATIVE, not delta-measured: a warmup
+        # violation is still a violation. (NV,) per sim — see
+        # `validate.VIOLATIONS` for the layout, `validate.summarize` to name
+        out["violations"] = dram_f["viol"].astype(jnp.float32)
     for k, name in _SCHED_SNAP.items():
         if k in sched_snap:
             out[name] = sched_f[k].astype(jnp.float32) \
@@ -206,16 +211,56 @@ def _sim_batch(cfg: SimConfig, policy: str, n_cycles: int, warmup: int,
                             p, a, kn))(knobs))(pool_batch, active_batch)
 
 
+def _check_pool(pool: Dict[str, Any], shape) -> None:
+    """Host-side pool validation: malformed columns raise a named-column
+    `ValueError` at dispatch instead of silently generating garbage traffic
+    (negative periods wrap the frame arithmetic, out-of-range classes fall
+    through every generator, shape mismatches broadcast into wrong-source
+    traffic)."""
+    shape = tuple(shape)
+    float_cols = ("mpki", "inst_per_miss", "rbl")
+    int_cols = ("blp", "dl_period", "dl_reqs", "dl_jitter", "src_class")
+    for k, v in pool.items():
+        v = np.asarray(v)
+        if tuple(v.shape) != shape:
+            raise ValueError(
+                f"pool column {k!r}: shape {tuple(v.shape)} does not match "
+                f"the active shape {shape}")
+        if k in float_cols and v.dtype.kind not in "fiu":
+            raise ValueError(
+                f"pool column {k!r}: dtype {v.dtype} is not numeric")
+        if k in int_cols and v.dtype.kind not in "iu":
+            raise ValueError(
+                f"pool column {k!r}: dtype {v.dtype} is not integral")
+        if k == "is_gpu" and v.dtype.kind != "b":
+            raise ValueError(
+                f"pool column 'is_gpu': dtype {v.dtype} is not bool")
+    for k in ("dl_period", "dl_reqs", "dl_jitter"):
+        if k in pool and np.any(np.asarray(pool[k]) < 0):
+            raise ValueError(
+                f"pool column {k!r}: negative values (deadline streams "
+                f"use 0 for 'no deadline', never negatives)")
+    if "src_class" in pool:
+        sc = np.asarray(pool["src_class"])
+        if np.any((sc < 0) | (sc >= params.N_CLASSES)):
+            raise ValueError(
+                f"pool column 'src_class': values outside the CLASS_NAMES "
+                f"range [0, {params.N_CLASSES}) "
+                f"(known classes: {params.CLASS_NAMES})")
+
+
 def prepare_pool(pool: Dict[str, Any], shape, copy: bool = False
                  ) -> Dict[str, Any]:
     """The one pool-preparation path shared by every driver.
 
-    Moves the pool to device (fresh buffers when `copy`, for donation
+    Validates the columns (named-column `ValueError` on malformed input),
+    moves the pool to device (fresh buffers when `copy`, for donation
     safety) and completes the N-class schema: absent deadline-stream keys
     are zero-filled, and absent `src_class` is derived from the legacy
     `is_gpu`/`dl_period` partition — so 2-class pools run bit-identically
     through the N-class engine.
     """
+    _check_pool(pool, shape)
     pool = {k: jnp.array(v, copy=True) if copy else jnp.asarray(v)
             for k, v in pool.items()}
     for k in ("dl_period", "dl_reqs", "dl_jitter"):

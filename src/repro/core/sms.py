@@ -309,3 +309,58 @@ def skip_cycles(sms: Dict[str, Any], k) -> Dict[str, Any]:
     sms = dict(sms)
     sms["rng2"] = engine.lcg_skip(sms["rng2"], k)
     return sms
+
+
+# ---------------------------------------------------------------------------
+# invariant-sanitizer hooks (repro.core.validate; traced only when
+# cfg.validate_enabled — ROADMAP "Validation & fault-injection contract")
+# ---------------------------------------------------------------------------
+
+def check_invariants(cfg: SimConfig, sms: Dict[str, Any], t):
+    """Count of violated staged-structure invariants: FIFO/DCS occupancy
+    within declared bounds, heads in range, `front_run` matching a full
+    recount, a non-negative drain counter, and the stage-2 rng stream at
+    its closed-form position (one draw per cycle, ticked or skipped)."""
+    C, F, D = cfg.n_channels, cfg.fifo_size, cfg.dcs_size
+    n = lambda x: jnp.sum(jnp.asarray(x, jnp.int32))
+    bad = n((sms["f_len"] < 0) | (sms["f_len"] > F))
+    bad += n((sms["f_head"] < 0) | (sms["f_head"] >= F))
+    bad += n((sms["d_len"] < 0) | (sms["d_len"] > D))
+    bad += n((sms["d_head"] < 0) | (sms["d_head"] >= D))
+    bad += n(sms["drain_left"] < 0)
+    bad += n((sms["front_run"] < 0) | (sms["front_run"] > sms["f_len"]))
+    bad += n((sms["f_len"] > 0) & (sms["front_run"] == 0))
+    run = jax.vmap(lambda r, b, h, l: _run_from_head(r, b, h, l, F),
+                   in_axes=(1, 1, 1, 1), out_axes=1)(
+        sms["f_row"], sms["f_bank"], sms["f_head"], sms["f_len"])
+    bad += n((sms["f_len"] > 0) & (run != sms["front_run"]))
+    rng0 = jnp.arange(1, C + 1, dtype=jnp.uint32) * jnp.uint32(40503)
+    bad += n(sms["rng2"] != engine.lcg_skip(rng0, t + 1))
+    return bad
+
+
+def audit_skip(cfg: SimConfig, st, sms: Dict[str, Any], dram, t, t_new):
+    """Would-fire lateness predicates for a jumped span, re-derived from the
+    stage conditions at the last skipped cycle u (stage state is frozen over
+    a span; only the age predicate is t-dependent, and it is monotone).
+    Stage-1 pushes report as late_admission, stage-2 batch events as
+    late_boundary, stage-3 DCS-head eligibility as late_issue."""
+    u = t_new - 1
+    skipped = t_new - t > 1
+    ch = engine.channel_of(cfg, st["pend_bank"])
+    room = sms["f_len"][ch, jnp.arange(cfg.n_src)] < cfg.fifo_size
+    s1 = jnp.any(st["pend_valid"] & room)
+    _, ready = batch_info(cfg, sms, u)
+    idle = sms["drain_left"] <= 0
+    s2 = jnp.any(~idle) | jnp.any(idle & jnp.any(ready, axis=-1))
+    at_head = lambda a: jnp.take_along_axis(a, sms["d_head"][..., None],
+                                            2)[..., 0]
+    row = at_head(sms["d_row"])
+    valid = sms["d_len"] > 0
+    elig, _, _ = jax.vmap(
+        lambda c, r, v: engine.eligibility(
+            cfg, dram, c, jnp.arange(cfg.n_banks), r, v, u)
+    )(jnp.arange(cfg.n_channels), row, valid)
+    b = lambda x: (skipped & x).astype(jnp.int32)
+    return {"late_admission": b(s1), "late_boundary": b(s2),
+            "late_issue": b(jnp.any(elig))}

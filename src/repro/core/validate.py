@@ -1,0 +1,286 @@
+"""Per-cycle invariant sanitizer: the third measurement-only subsystem.
+
+The paper's low-level MC task is DRAM command scheduling "while ensuring
+compliance with all DRAM timing and power constraints" (§1). Golden digests
+pin drift against recorded traces but cannot localize a violation and cover
+nothing at new knob points or workloads — this module turns the contracts
+into *checked properties*. Gated by ``cfg.validate_enabled`` (default off),
+it accumulates int32 violation counters in ``dram_state["viol"]``:
+
+  * DRAM timing compliance — an issue committed to a busy bank, an ACTIVATE
+    inside a saturated tFAW window, a burst scheduled before the shared bus
+    frees (checked on the pre-update state inside `engine.issue_channels`);
+  * conservation laws — per-source ``emitted == completed + outstanding``,
+    total ``outstanding == pending + queued + in-flight``, policy structure
+    occupancy within declared bounds (via the per-policy hooks below),
+    ``sb_cycles + pd_cycles == cycles`` per channel, ``lat_hist`` row sums
+    == ``issued``, ``frames_released == dl_met + dl_missed``, and the
+    engine rng stream sitting at its closed-form position;
+  * a skip-witness lateness auditor for the variable-step driver — any
+    event that *would have fired* inside a jumped span is counted, turning
+    the ROADMAP's "conservative-early, never late" rule from a convention
+    into a checked property.
+
+Same contract as energy/qos: counters never feed back into scheduling, so
+flipping the flag cannot change a decision, and OFF adds zero primitives to
+the per-cycle jaxpr (pinned in tests/test_perf_invariants.py). ON may use
+gathers — it is a debug mode, not a hot path.
+
+Auditor design note: the auditor must NOT re-evaluate the driver's witness
+formulas at the base cycle on post-span state (closed-form accruals like
+``insts_acc += k*ipc`` make those formulas report *past* crossings — a
+false positive whenever the audited witness was the binding minimum).
+Instead it checks direct would-fire predicates at the last skipped cycle
+``u = t_new - 1`` — valid because readiness predicates are monotone in t
+while span state is frozen — plus closed-form whole-span checks for frame
+boundaries and completion-ring slots.
+
+Per-policy hooks (all optional; see ROADMAP "Validation & fault-injection
+contract"):
+
+  * ``queued_requests(cfg, sched) -> i32`` — requests held in policy
+    structures (buffer/FIFOs/DCS), feeding the total-flow conservation law;
+  * ``check_invariants(cfg, pool, st, sched, t) -> i32`` — count of
+    violated structure invariants (occupancy bounds, mirror-counter
+    recounts, policy rng stream position);
+  * ``audit_skip(cfg, pool, st, sched, dram, t, t_new) -> {name: i32}`` —
+    policy-side lateness checks for a jumped span (admission readiness,
+    issue eligibility, policy boundaries), merged into the ``late_*``
+    counters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import CLS_CPU, CLS_GPU, CLS_HWA, SimConfig
+
+# counter layout of dram_state["viol"] — order is part of the metric schema
+VIOLATIONS = (
+    "busy_bank",        # issue committed to a bank before bank_free
+    "tfaw",             # ACTIVATE inside a saturated four-ACT window
+    "bus_conflict",     # data burst scheduled before the shared bus frees
+    "req_conserve",     # per-source emitted != completed + outstanding
+    "flow_conserve",    # outstanding != pending + queued + in-flight
+    "occupancy",        # policy structure bounds / mirror counters broken
+    "energy_bg",        # sb_cycles + pd_cycles != elapsed cycles (per chan)
+    "lat_hist",         # latency histogram row sum != issued
+    "frames",           # frames_released != dl_met + dl_missed
+    "rng_stream",       # engine rng off its closed-form stream position
+    "late_source",      # skip span jumped past a source emission
+    "late_completion",  # skip span jumped past a completion-ring slot
+    "late_admission",   # skip span jumped past an admission-ready cycle
+    "late_issue",       # skip span jumped past an issue-eligible cycle
+    "late_boundary",    # skip span jumped past a frame/policy boundary
+)
+NV = len(VIOLATIONS)
+IDX = {n: i for i, n in enumerate(VIOLATIONS)}
+
+# dram_state keys owned by this module (digest whitelists key off this)
+STATE_KEYS = ("viol",)
+
+
+def validate_state(cfg: SimConfig) -> Dict[str, Any]:
+    """Sanitizer counters for `engine.dram_state` ({} when disabled)."""
+    if not cfg.validate_enabled:
+        return {}
+    return {"viol": jnp.zeros((NV,), jnp.int32)}
+
+
+def bump(counts: Dict[str, Any]) -> jax.Array:
+    """Assemble an (NV,) increment vector from named counts (missing = 0)."""
+    unknown = set(counts) - set(VIOLATIONS)
+    assert not unknown, f"unknown violation counters: {sorted(unknown)}"
+    return jnp.stack([jnp.asarray(counts.get(n, 0), jnp.int32).reshape(())
+                      for n in VIOLATIONS])
+
+
+def _nbool(x) -> jax.Array:
+    return jnp.sum(jnp.asarray(x, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# DRAM timing compliance (called from engine.issue_channels, PRE-update)
+# ---------------------------------------------------------------------------
+
+def issue_counts(cfg: SimConfig, dram: Dict[str, Any], do_issue: jax.Array,
+                 bank: jax.Array, lat: jax.Array, is_hit: jax.Array,
+                 t: jax.Array) -> jax.Array:
+    """Timing-violation increments for one issue commit (all args (C,)).
+
+    Reads the pre-update DRAM state: a correct scheduler only sets
+    `do_issue` on candidates that passed `engine.eligibility`, so each
+    check here re-derives one eligibility gate independently.
+    """
+    tm = cfg.timing
+    bank_free = jnp.take_along_axis(dram["bank_free"], bank[:, None],
+                                    axis=1)[:, 0]
+    busy = do_issue & (bank_free > t)
+    oldest_act = jnp.min(dram["act_ring"], axis=1)
+    faw = do_issue & ~is_hit & (t - oldest_act < tm.t_faw)
+    bus = do_issue & (t + lat < dram["bus_free"])
+    return bump({"busy_bank": _nbool(busy), "tfaw": _nbool(faw),
+                 "bus_conflict": _nbool(bus)})
+
+
+# ---------------------------------------------------------------------------
+# end-of-cycle conservation laws
+# ---------------------------------------------------------------------------
+
+def tick_counts(cfg: SimConfig, pool: Dict[str, jax.Array], pol,
+                st: Dict[str, Any], sched: Dict[str, Any],
+                dram: Dict[str, Any], t: jax.Array) -> jax.Array:
+    """Conservation-law increments, evaluated on post-step state at cycle t.
+
+    Each law is an exact identity of the update rules — any nonzero count
+    localizes a broken bookkeeping site, not a modeling choice.
+    """
+    from repro.core import engine
+
+    c: Dict[str, Any] = {}
+    c["req_conserve"] = _nbool(
+        st["emitted"] - st["completed"] != st["outstanding"])
+
+    qfn = getattr(pol, "queued_requests", None)
+    if qfn is not None:
+        total = jnp.sum(st["outstanding"])
+        held = (jnp.sum(st["pend_valid"].astype(jnp.int32))
+                + qfn(cfg, sched) + jnp.sum(dram["ring"]))
+        c["flow_conserve"] = _nbool(total != held)
+
+    chk = getattr(pol, "check_invariants", None)
+    if chk is not None:
+        c["occupancy"] = chk(cfg, pool, st, sched, t)
+
+    if "sb_cycles" in dram:
+        c["energy_bg"] = _nbool(dram["sb_cycles"] + dram["pd_cycles"] != t + 1)
+    if "lat_hist" in dram:
+        c["lat_hist"] = _nbool(
+            jnp.sum(dram["lat_hist"], axis=-1) != dram["issued"])
+    c["frames"] = _nbool(
+        st["frames_released"] != st["dl_met"] + st["dl_missed"])
+
+    # the engine rng stream is a pure function of t (2 draws per cycle,
+    # ticked or skipped) — catches fast-forward off-by-ones exactly
+    rng0 = (jnp.arange(cfg.n_src, dtype=jnp.uint32) * jnp.uint32(2654435761)
+            + jnp.uint32(12345))
+    expect = engine.lcg_skip(rng0, 2 * (t + 1))
+    c["rng_stream"] = _nbool(st["rng"] != expect)
+    return bump(c)
+
+
+# ---------------------------------------------------------------------------
+# skip-witness lateness auditor (variable-step driver)
+# ---------------------------------------------------------------------------
+
+def span_counts(cfg: SimConfig, pool: Dict[str, jax.Array], pol,
+                st: Dict[str, Any], sched: Dict[str, Any],
+                dram: Dict[str, Any], active: jax.Array,
+                t: jax.Array, t_new: jax.Array) -> jax.Array:
+    """Lateness increments for the jumped span (t, t_new), evaluated after
+    the closed-form accruals. Any would-fire event strictly inside the span
+    is a witness-contract violation (the driver may only jump over cycles
+    where every hook is a no-op beyond the replayed accruals)."""
+    from repro.core import engine
+
+    S = cfg.n_src
+    k = t_new - t - 1                    # number of skipped cycles
+    skipped = k >= 1
+    u = t_new - 1                        # last skipped cycle
+
+    cls = pool["src_class"]
+    mshr = jnp.where(cls == CLS_GPU, cfg.gpu_mshr,
+                     jnp.where(cls == CLS_HWA, cfg.hwa_mshr, cfg.cpu_mshr))
+    free = active & ~st["pend_valid"] & (st["outstanding"] < mshr)
+    # would-fire emission predicates at u on post-accrual state. Monotone in
+    # t with span state frozen, so firing anywhere in the span implies
+    # firing at u; conversely a correct driver guarantees not-at-u.
+    want_cpu = free & (cls == CLS_CPU) & \
+        (st["insts_acc"] >= pool["inst_per_miss"])
+    want_gpu = free & (cls == CLS_GPU)
+    period = jnp.maximum(pool["dl_period"], 1)
+    released = jnp.mod(u, period) >= \
+        engine.frame_release_offset(S, u // period, pool["dl_jitter"])
+    want_hwa = free & (cls == CLS_HWA) & released & \
+        (st["period_done"] + st["outstanding"] < pool["dl_reqs"])
+    c: Dict[str, Any] = {
+        "late_source": jnp.where(
+            skipped, _nbool(want_cpu | want_gpu | want_hwa), 0)}
+
+    # completions due strictly inside the span: ring slot t+1+dt with
+    # dt = (slot - (t+1)) mod RING and dt < min(k, RING)
+    slots = jnp.arange(engine.RING, dtype=jnp.int32)
+    dt = jnp.mod(slots - (t + 1), engine.RING)
+    pend = jnp.any(dram["ring"] > 0, axis=1)
+    c["late_completion"] = _nbool(pend & (dt < jnp.minimum(k, engine.RING)))
+
+    # frame boundaries crossed inside [t+1, u]
+    has_dl = pool["dl_period"] > 0
+    c["late_boundary"] = _nbool(has_dl & (u // period > t // period))
+
+    afn = getattr(pol, "audit_skip", None)
+    if afn is not None:
+        for name, n in afn(cfg, pool, st, sched, dram, t, t_new).items():
+            c[name] = c.get(name, 0) + jnp.asarray(n, jnp.int32)
+    return bump(c)
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers
+# ---------------------------------------------------------------------------
+
+def summarize(v) -> Dict[str, int]:
+    """Collapse a violations array of shape (..., NV) to {name: total}."""
+    arr = np.asarray(v).astype(np.int64).reshape(-1, NV).sum(axis=0)
+    return {n: int(x) for n, x in zip(VIOLATIONS, arr)}
+
+
+def debug_check(cfg: SimConfig, policy, pool, active, n_cycles: int = 2_000,
+                skip: bool = False):
+    """Hard-fail debug mode on the solo path: run with the sanitizer on and
+    `checkify`-raise at the first cycle whose violation counters go nonzero
+    (instead of silently accumulating). Returns the final carry on success.
+    """
+    from jax.experimental import checkify
+
+    from repro.core import policy as policy_api
+    from repro.core import simulator as sim
+
+    if not cfg.validate_enabled:
+        cfg = cfg.replace(validate_enabled=True)
+    pool = sim.prepare_pool(pool, (cfg.n_src,))
+    bcfg, pol, carry = sim._init(cfg, policy)
+    active = jnp.asarray(active, bool)
+    step = policy_api.make_step(bcfg, pol, pool, active)
+    skip_body = policy_api.make_skip_step(bcfg, pol, pool, active) \
+        if skip else None
+
+    def checked(carry, t):
+        if skip_body is None:
+            carry, _ = step(carry, t)
+            t_new = t + 1
+        else:
+            carry, t_new = skip_body(carry, t, jnp.int32(n_cycles))
+        checkify.check(jnp.all(carry[2]["viol"] == 0),
+                       "invariant violation at cycle {t}: counters {v}",
+                       t=t, v=carry[2]["viol"])
+        return carry, t_new
+
+    def run(carry):
+        if skip_body is None:
+            return jax.lax.scan(
+                checked, carry, jnp.arange(n_cycles, dtype=jnp.int32))[0]
+
+        def body(state):
+            carry, t = state
+            return checked(carry, t)
+
+        return jax.lax.while_loop(
+            lambda s: s[1] < n_cycles, body, (carry, jnp.int32(0)))[0]
+
+    err, final = jax.jit(checkify.checkify(run))(carry)
+    err.throw()
+    return jax.tree_util.tree_map(np.asarray, final)

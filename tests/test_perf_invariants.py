@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro import compat
-from repro.core import energy, engine, params, qos
+from repro.core import energy, engine, params, qos, validate
 from repro.core import policy as policy_api
 from repro.core import simulator as sim
 from repro.core.params import Knobs, SimConfig
@@ -138,6 +138,35 @@ def test_qos_accounting_adds_no_sorts_or_scatters():
         assert on == off, (
             f"{name}: QoS accounting changed sort/scatter/gather "
             f"population: {off} -> {on}")
+
+
+def test_validate_off_adds_zero_primitives(monkeypatch):
+    """The sanitizer is gated at TRACE time: with `validate_enabled=False`
+    (the default) none of its counter functions may even be called during
+    tracing, so the per-cycle jaxpr is untouched — zero primitives added,
+    not merely zero sorts. Proven by poisoning every validate entry point
+    and tracing both drivers."""
+    assert not CFG.validate_enabled
+
+    def boom(*a, **k):
+        raise AssertionError("validate code reached with validate off")
+
+    for fn in ("issue_counts", "tick_counts", "span_counts"):
+        monkeypatch.setattr(validate, fn, boom)
+    for name in ("frfcfs", "parbs", "sms"):
+        cfg, pol, carry = sim._init(CFG, name)
+        pool = _dummy_pool(cfg)
+        active = jnp.ones((cfg.n_src,), bool)
+        jax.make_jaxpr(policy_api.make_step(cfg, pol, pool, active))(
+            carry, jnp.int32(5))
+        body = policy_api.make_skip_step(cfg, pol, pool, active)
+        jax.make_jaxpr(body)(carry, jnp.int32(5), jnp.int32(100))
+    # non-vacuity: the same poison DOES fire once the sanitizer is on
+    cfg, pol, carry = sim._init(CFG.replace(validate_enabled=True), "frfcfs")
+    with pytest.raises(AssertionError, match="validate code reached"):
+        jax.make_jaxpr(policy_api.make_step(
+            cfg, pol, _dummy_pool(cfg),
+            jnp.ones((cfg.n_src,), bool)))(carry, jnp.int32(5))
 
 
 def _step_jaxpr_traced_knobs(policy_name, base_cfg=CFG):
@@ -279,3 +308,32 @@ def test_cond_refactor_bit_identical(policy_name):
     sched = _digest(sched_f)
     for k in set(sched) & set(g["sched"]):
         assert sched[k] == g["sched"][k], f"{policy_name} sched[{k}] diverged"
+
+
+@pytest.mark.parametrize("policy_name", ["atlas", "parbs", "tcm"])
+def test_validate_on_bit_identical(policy_name):
+    """Flipping the sanitizer ON is measurement-only: every golden digest
+    still matches bit-for-bit (the counters never feed back into a
+    scheduling decision), the only new dram key is the violation vector,
+    and that vector is all zeros on a healthy run."""
+    st_f, sched_f, dram_f = sim.simulate_debug(
+        CFG.replace(validate_enabled=True), policy_name, _golden_pool(CFG),
+        np.ones(CFG.n_src, bool), n_cycles=1_500)
+    assert not np.asarray(dram_f["viol"]).any(), \
+        validate.summarize(np.asarray(dram_f["viol"]))
+    g = GOLDEN[policy_name]
+    for part, tree in (("src", st_f), ("dram", dram_f)):
+        new = _digest(tree)
+        extra = set(new) - set(g[part])
+        allowed = set(energy.STATE_KEYS) | set(qos.STATE_KEYS) \
+            | set(validate.STATE_KEYS) if part == "dram" \
+            else set(engine.NCLASS_SRC_KEYS)
+        assert extra <= allowed, \
+            f"{policy_name} {part} grew unexpected keys: {extra}"
+        for k, h in g[part].items():
+            assert new[k] == h, \
+                f"{policy_name} {part}[{k}] diverged under validate"
+    sched = _digest(sched_f)
+    for k in set(sched) & set(g["sched"]):
+        assert sched[k] == g["sched"][k], \
+            f"{policy_name} sched[{k}] diverged under validate"

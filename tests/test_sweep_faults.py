@@ -1,0 +1,171 @@
+"""Fault-tolerant benchmark sweeps: the degradation ladder, partial
+results, strict mode, and cache-version eviction in benchmarks.common.
+
+Dispatch failures are forced by monkeypatching the simulator entry points
+for one policy; the ladder must recover every healthy slice, persist it
+per-slice, and surface the poisoned slice as an uncached error entry
+(tolerant) or an immediate re-raise (strict).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks import common
+from repro.core import simulator as sim
+from repro.core import workloads as wl
+
+CFG = common.parity_config(n_cpu=3)
+WLS = wl.make_workloads(CFG.n_cpu, n_per_cat=1)
+KW = dict(n_cycles=300, warmup=50)
+
+
+@pytest.fixture
+def exp_dir(tmp_path, monkeypatch):
+    monkeypatch.setattr(common, "EXP_DIR", tmp_path)
+    return tmp_path
+
+
+def _poison(monkeypatch, bad_policy):
+    """Make every dispatch path fail for `bad_policy` only. Pass a
+    DEDICATED MonkeyPatch instance when the test needs to heal the fault
+    mid-test — undoing the shared fixture instance would also revert the
+    EXP_DIR redirect and write caches into the real experiments dir."""
+    orig_stacked = sim.simulate_stacked_async
+    orig_async = sim.simulate_async
+    orig_sync = sim.simulate
+    orig_grid_async = sim.simulate_grid_async
+    orig_grid = sim.simulate_grid
+    orig_sgrid = sim.simulate_stacked_grid_async
+
+    def bad_stacked(cfg, pols, *a, **k):
+        if bad_policy in pols:
+            raise RuntimeError("boom-stacked")
+        return orig_stacked(cfg, pols, *a, **k)
+
+    def bad_async(cfg, pol, *a, **k):
+        if pol == bad_policy:
+            raise RuntimeError("boom-async")
+        return orig_async(cfg, pol, *a, **k)
+
+    def bad_sync(cfg, pol, *a, **k):
+        if pol == bad_policy:
+            raise RuntimeError("boom-sync")
+        return orig_sync(cfg, pol, *a, **k)
+
+    def bad_grid_async(cfg, pol, *a, **k):
+        if pol == bad_policy:
+            raise RuntimeError("boom-grid-async")
+        return orig_grid_async(cfg, pol, *a, **k)
+
+    def bad_grid(cfg, pol, *a, **k):
+        if pol == bad_policy:
+            raise RuntimeError("boom-grid")
+        return orig_grid(cfg, pol, *a, **k)
+
+    def bad_sgrid(cfg, slices, *a, **k):
+        if any((s[0] if isinstance(s, tuple) else s) == bad_policy
+               for s in slices):
+            raise RuntimeError("boom-stacked-grid")
+        return orig_sgrid(cfg, slices, *a, **k)
+
+    monkeypatch.setattr(sim, "simulate_stacked_grid_async", bad_sgrid)
+    monkeypatch.setattr(sim, "simulate_stacked_async", bad_stacked)
+    monkeypatch.setattr(sim, "simulate_async", bad_async)
+    monkeypatch.setattr(sim, "simulate", bad_sync)
+    monkeypatch.setattr(sim, "simulate_grid_async", bad_grid_async)
+    monkeypatch.setattr(sim, "simulate_grid", bad_grid)
+
+
+def test_run_sweep_tolerant_partial_report(exp_dir):
+    poison = pytest.MonkeyPatch()
+    try:
+        _poison(poison, "atlas")
+        res = common.run_sweep(CFG, ["frfcfs", "atlas"], WLS, **KW)
+    finally:
+        poison.undo()
+    assert "error" in res["atlas"] and "boom" in res["atlas"]["error"]
+    assert "error" not in res["frfcfs"]
+    assert res["frfcfs"]["agg"]["weighted_speedup"] > 0
+    # healthy slice persisted per-slice; poisoned slice never cached
+    assert list(exp_dir.glob("frfcfs_*.json"))
+    assert not list(exp_dir.glob("atlas_*.json"))
+    # resume: a re-run with the fault healed retries ONLY the failed slice
+    res2 = common.run_sweep(CFG, ["frfcfs", "atlas"], WLS, **KW)
+    assert "error" not in res2["atlas"]
+    assert list(exp_dir.glob("atlas_*.json"))
+
+
+def test_run_sweep_strict_raises(exp_dir, monkeypatch):
+    _poison(monkeypatch, "atlas")
+    with pytest.raises(RuntimeError, match="boom"):
+        common.run_sweep(CFG, ["frfcfs", "atlas"], WLS, strict=True, **KW)
+
+
+def test_run_grid_tolerant_partial_report(exp_dir, monkeypatch):
+    _poison(monkeypatch, "atlas")
+    specs = [("frfcfs", "ok-slice", {}),
+             ("atlas", "bad-slice", {"atlas_epoch": 64})]
+    res = common.run_grid(CFG, specs, WLS, **KW)
+    assert "error" in res["bad-slice"]
+    assert res["bad-slice"]["label"] == "bad-slice"
+    assert "error" not in res["ok-slice"]
+    assert res["ok-slice"]["agg"]["weighted_speedup"] > 0
+    assert not list(exp_dir.glob("grid_atlas_*.json"))
+    # the partial report keeps slices parallel to the request
+    assert list(res) == ["ok-slice", "bad-slice"]
+
+
+def test_run_grid_strict_raises(exp_dir, monkeypatch):
+    _poison(monkeypatch, "atlas")
+    specs = [("frfcfs", "ok-slice", {}),
+             ("atlas", "bad-slice", {"atlas_epoch": 64})]
+    with pytest.raises(RuntimeError, match="boom"):
+        common.run_grid(CFG, specs, WLS, strict=True, **KW)
+
+
+def test_fmt_cat_table_skips_error_entries(exp_dir, monkeypatch):
+    _poison(monkeypatch, "atlas")
+    res = common.run_sweep(CFG, ["frfcfs", "atlas"], WLS, **KW)
+    table = common.fmt_cat_table(res, "weighted_speedup")
+    lines = table.splitlines()
+    assert any(line.startswith("atlas,ERROR:") for line in lines)
+    assert any(line.startswith("frfcfs,") and "ERROR" not in line
+               for line in lines)
+
+
+def test_cache_version_stamped_and_stale_evicted(exp_dir):
+    res = common.run_sweep(CFG, ["frfcfs"], WLS, **KW)
+    assert res["frfcfs"]["cache_version"] == common.CACHE_VERSION
+    path = next(exp_dir.glob("frfcfs_*.json"))
+    saved = json.loads(path.read_text())
+    assert saved["cache_version"] == common.CACHE_VERSION
+    # tamper the stamp: the loader must evict and recompute, not serve it
+    saved["cache_version"] = "ancient"
+    saved["agg"]["weighted_speedup"] = -1.0
+    path.write_text(json.dumps(saved))
+    res2 = common.run_sweep(CFG, ["frfcfs"], WLS, **KW)
+    assert res2["frfcfs"]["agg"]["weighted_speedup"] > 0
+    assert json.loads(path.read_text())["cache_version"] \
+        == common.CACHE_VERSION
+
+
+def test_evict_stale_sweeps_directory(exp_dir):
+    common.run_sweep(CFG, ["frfcfs"], WLS, **KW)
+    fresh = {p.name for p in exp_dir.glob("*.json")}
+    stale = exp_dir / "grid_old_deadbeef.json"
+    stale.write_text(json.dumps({"cache_version": "ancient"}))
+    corrupt = exp_dir / "frfcfs_corrupt.json"
+    corrupt.write_text("{not json")
+    gone = common.evict_stale()
+    assert set(gone) == {stale.name, corrupt.name}
+    assert not stale.exists() and not corrupt.exists()
+    assert {p.name for p in exp_dir.glob("*.json")} == fresh
+
+
+def test_alone_cache_versioned(exp_dir):
+    common.run_sweep(CFG, ["frfcfs"], WLS, **KW)
+    apath = next(exp_dir.glob("alone_frfcfs_*.json"))
+    data = json.loads(apath.read_text())
+    assert data["cache_version"] == common.CACHE_VERSION
+    assert isinstance(data["alone"], dict) and data["alone"]

@@ -1,0 +1,242 @@
+"""The self-checking contract: the invariant sanitizer stays silent on
+healthy runs and fires on every registered fault.
+
+Three layers:
+
+  * zero-violation sweeps — every registry policy, ticked AND variable-
+    step, solo AND stacked, default AND non-default knob points, with
+    energy+QoS accounting on;
+  * property tests over randomized pools/knobs/drivers (hypothesis when
+    the container ships it, a seeded fallback sampler otherwise — the
+    property is identical);
+  * falsifiability — each fault in `repro.core.faults` must flip one of
+    its targeted counters, and the `checkify` hard-fail mode must raise
+    on a faulted run while staying quiet on a clean one.
+
+Fault runs go through `simulate_debug`/`simulate_debug_stacked` ONLY:
+those build a fresh program per call, so a monkeypatched engine function
+is actually traced instead of served from the cached `_sim_batch` jit.
+"""
+import numpy as np
+import pytest
+
+from repro.core import faults, validate
+from repro.core import policy as policy_api
+from repro.core import simulator as sim
+from repro.core.params import N_CLASSES, SimConfig
+
+CFG = SimConfig(n_cpu=3, n_gpu=1, n_channels=2, buf_entries=24, fifo_size=5,
+                dcs_size=3, validate_enabled=True)
+
+try:  # container may not ship hypothesis; the seeded fallback covers it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _pool(seed, S, idle=False):
+    rs = np.random.RandomState(seed)
+    pool = {
+        "mpki": (np.full((S,), 0.5, np.float32) if idle
+                 else rs.uniform(1.0, 40.0, S).astype(np.float32)),
+        "inst_per_miss": rs.uniform(30.0, 300.0, S).astype(np.float32),
+        "rbl": rs.uniform(0.1, 0.95, S).astype(np.float32),
+        "blp": rs.randint(1, 5, S).astype(np.int32),
+        "is_gpu": np.zeros((S,), bool),
+        "dl_period": np.zeros((S,), np.int32),
+        "dl_reqs": np.zeros((S,), np.int32),
+        "dl_jitter": np.zeros((S,), np.int32),
+    }
+    if not idle:
+        pool["is_gpu"][-1] = True
+    pool["dl_period"][0] = int(rs.randint(200, 600))
+    pool["dl_reqs"][0] = int(rs.randint(5, 40))
+    return pool
+
+
+def _nonzero(dram):
+    return {k: v for k, v in
+            validate.summarize(np.asarray(dram["viol"])).items() if v}
+
+
+def _stackable():
+    return [n for n in sim.ALL_POLICIES
+            if policy_api.is_stackable(n, CFG)]
+
+
+# ---------------------------------------------------------------------------
+# zero violations on healthy runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy_name", sim.ALL_POLICIES)
+@pytest.mark.parametrize("skip", [False, True], ids=["tick", "skip"])
+def test_zero_violations_every_policy(policy_name, skip):
+    assert CFG.energy_enabled and CFG.qos_enabled
+    st_f = sim.simulate_debug(CFG, policy_name, _pool(7, CFG.n_src),
+                              np.ones(CFG.n_src, bool), n_cycles=900,
+                              skip=skip)
+    assert not _nonzero(st_f[2]), (policy_name, skip)
+
+
+@pytest.mark.parametrize("skip", [False, True], ids=["tick", "skip"])
+def test_zero_violations_stacked(skip):
+    out = sim.simulate_debug_stacked(CFG, _stackable(), _pool(7, CFG.n_src),
+                                     np.ones(CFG.n_src, bool), n_cycles=900,
+                                     skip=skip)
+    for pol, (_, _, dram) in out.items():
+        assert not _nonzero(dram), (pol, skip)
+
+
+@pytest.mark.parametrize("policy_name,overrides", [
+    ("parbs", dict(parbs_cap=2)),
+    ("atlas", dict(atlas_epoch=96, cpu_reserve=1)),
+    ("tcm", dict(tcm_quantum=64)),
+    ("bliss", dict(bliss_clear_interval=500)),
+    ("sms", dict(fifo_size=3, dcs_size=2)),
+    ("squash_prio", dict(squash_epoch=128)),
+])
+@pytest.mark.parametrize("skip", [False, True], ids=["tick", "skip"])
+def test_zero_violations_nondefault_knob_points(policy_name, overrides,
+                                                skip):
+    """Value and period knobs alike are plain SimConfig fields on the solo
+    debug path, so non-default points exercise the same sanitizer."""
+    cfg = CFG.replace(**overrides)
+    st_f = sim.simulate_debug(cfg, policy_name, _pool(11, cfg.n_src),
+                              np.ones(cfg.n_src, bool), n_cycles=900,
+                              skip=skip)
+    assert not _nonzero(st_f[2]), (policy_name, overrides, skip)
+
+
+# ---------------------------------------------------------------------------
+# the property, over randomized pools/configs/drivers
+# ---------------------------------------------------------------------------
+
+def _holds_for(seed):
+    rs = np.random.RandomState(seed)
+    cfg = CFG.replace(
+        n_cpu=int(rs.randint(2, 5)),
+        n_channels=int(rs.choice([1, 2])),
+        buf_entries=int(rs.randint(8, 32)),
+        parbs_cap=int(rs.randint(1, 6)),
+        batch_age_cap=int(rs.randint(100, 2000)),
+    )
+    policy_name = sim.ALL_POLICIES[int(rs.randint(len(sim.ALL_POLICIES)))]
+    skip = bool(rs.randint(2))
+    pool = _pool(seed, cfg.n_src, idle=bool(rs.randint(2)))
+    active = rs.rand(cfg.n_src) < 0.9
+    active[0] = True
+    st_f = sim.simulate_debug(cfg, policy_name, pool, active, n_cycles=500,
+                              skip=skip)
+    assert not _nonzero(st_f[2]), (seed, policy_name, skip)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_property_no_violations_random_points(seed):
+    _holds_for(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_property_no_violations_hypothesis(seed):
+        _holds_for(seed)
+
+
+# ---------------------------------------------------------------------------
+# falsifiability: every fault class is caught
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fault", sorted(faults.FAULTS))
+def test_fault_injection_flips_targeted_counter(fault):
+    targets = faults.TARGETS[fault]
+    skip = fault in faults.SKIP_ONLY
+    # skip-machinery faults need spans to form: idle-heavy pool
+    pool = _pool(7, CFG.n_src, idle=skip)
+    active = np.ones(CFG.n_src, bool)
+    with faults.inject(fault):
+        if fault in faults.STACKED_ONLY:
+            out = sim.simulate_debug_stacked(CFG, ("frfcfs", "parbs"), pool,
+                                             active, n_cycles=800,
+                                             skip=False)
+            summary = validate.summarize(np.asarray(out["parbs"][2]["viol"]))
+        else:
+            st_f = sim.simulate_debug(CFG, "frfcfs", pool, active,
+                                      n_cycles=800, skip=skip)
+            summary = validate.summarize(np.asarray(st_f[2]["viol"]))
+    assert sum(summary[k] for k in targets) > 0, (fault, summary)
+
+
+def test_fault_injection_restores_cleanly():
+    """Leaving the `inject` context unwinds the patch: the same run is
+    violation-free again (and the PAR-BS write-set declaration is back)."""
+    pool = _pool(7, CFG.n_src)
+    active = np.ones(CFG.n_src, bool)
+    with faults.inject("stacked_writeset"):
+        pass
+    parbs = policy_api.get("parbs")
+    assert "msub" in parbs.stacked_tick_keys
+    assert "msub" in parbs.stacked_issue_keys
+    with faults.inject("dropped_completion"):
+        pass
+    st_f = sim.simulate_debug(CFG, "frfcfs", pool, active, n_cycles=400)
+    assert not _nonzero(st_f[2])
+
+
+def test_debug_check_clean_and_hard_fail():
+    """`validate.debug_check` (checkify mode) passes a healthy run and
+    raises — naming the first offending cycle — under a fault."""
+    pool = _pool(7, CFG.n_src)
+    active = np.ones(CFG.n_src, bool)
+    st_f = validate.debug_check(CFG.replace(validate_enabled=False),
+                                "frfcfs", pool, active, n_cycles=400)
+    assert not np.asarray(st_f[2]["viol"]).any()
+    with faults.inject("dropped_completion"):
+        with pytest.raises(Exception, match="invariant violation at cycle"):
+            validate.debug_check(CFG, "frfcfs", pool, active, n_cycles=400)
+
+
+def test_unknown_fault_rejected():
+    with pytest.raises(KeyError, match="unknown fault"):
+        faults.inject("nope")
+
+
+# ---------------------------------------------------------------------------
+# prepare_pool input validation (named-column ValueErrors)
+# ---------------------------------------------------------------------------
+
+def test_prepare_pool_rejects_negative_deadline_period():
+    pool = _pool(7, CFG.n_src)
+    pool["dl_period"][1] = -5
+    with pytest.raises(ValueError, match="dl_period.*negative"):
+        sim.prepare_pool(pool, (CFG.n_src,))
+
+
+def test_prepare_pool_rejects_out_of_range_src_class():
+    pool = _pool(7, CFG.n_src)
+    pool["src_class"] = np.full((CFG.n_src,), N_CLASSES, np.int32)
+    with pytest.raises(ValueError, match="src_class.*CLASS_NAMES"):
+        sim.prepare_pool(pool, (CFG.n_src,))
+
+
+def test_prepare_pool_rejects_shape_mismatch():
+    pool = _pool(7, CFG.n_src)
+    pool["mpki"] = pool["mpki"][:-1]
+    with pytest.raises(ValueError, match="mpki.*does not match"):
+        sim.prepare_pool(pool, (CFG.n_src,))
+
+
+def test_prepare_pool_rejects_wrong_dtypes():
+    pool = _pool(7, CFG.n_src)
+    pool["is_gpu"] = pool["is_gpu"].astype(np.int32)
+    with pytest.raises(ValueError, match="is_gpu.*not bool"):
+        sim.prepare_pool(pool, (CFG.n_src,))
+    pool = _pool(7, CFG.n_src)
+    pool["blp"] = pool["blp"].astype(np.float32)
+    with pytest.raises(ValueError, match="blp.*not integral"):
+        sim.prepare_pool(pool, (CFG.n_src,))
+
+
+def test_prepare_pool_accepts_healthy_pool():
+    out = sim.prepare_pool(_pool(7, CFG.n_src), (CFG.n_src,))
+    assert "src_class" in out and "dl_jitter" in out
