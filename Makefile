@@ -7,7 +7,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test ci deps-dev quickstart bench-smoke bench-simspeed bench-qos \
-	bench-dse check-invariants
+	bench-dse bench-timeline bench-trend check-invariants
 
 deps-dev:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -42,6 +42,17 @@ bench-qos:
 # XLA program, scored into the energy/perf/area Pareto frontier
 bench-dse:
 	$(PY) -m benchmarks.fig_pareto
+
+# flight-recorder figure: per-epoch interference timelines on a GPU-bursty
+# 3-class mix; --check asserts SMS's relative CPU-latency spike stays
+# below the best centralized policy's (the paper's smoothing claim)
+bench-timeline:
+	$(PY) -m benchmarks.fig_timeline --check
+
+# perf-trend ledger: gate the committed BENCH_simspeed.json snapshot
+# against BENCH_history.jsonl, then record it as a new ledger entry
+bench-trend:
+	$(PY) -m benchmarks.bench_trend --check --append
 
 ci: deps-dev test
 

@@ -1,0 +1,178 @@
+"""Perf-trend ledger: append simspeed/smoke runs, flag regressions.
+
+`BENCH_simspeed.json` is a two-point snapshot (baseline vs current); this
+module keeps the full trajectory in `BENCH_history.jsonl` — one JSON object
+per line per recorded run — so a slow drift is as visible as a cliff.
+
+Entry schema (one line each):
+
+    {"ts": "...", "kind": "simspeed" | "smoke", "label": "...",
+     "sweep": {"cycles_per_s": ..., "wall_s": ..., ...},
+     "scale": {"n_per_cat": ..., "n_cycles": ..., "warmup": ...},
+     "meta": {"jax": ..., "backend": ...}}
+
+Only entries at the SAME sweep scale are comparable — cycles/s at smoke
+scale is dominated by compile time — so `--check` compares the candidate
+against the best ledger entry with a matching `scale` and fails (exit 1)
+when throughput drops by more than `--tolerance` (default 20%).
+
+CLI:
+
+    python -m benchmarks.bench_trend --check          # gate current repo
+                                                      # snapshot vs ledger
+    python -m benchmarks.bench_trend --append         # record the current
+                                                      # BENCH_simspeed.json
+    python -m benchmarks.bench_trend --append --summary out.json \
+        --kind smoke                                  # record a smoke run
+
+`make bench-trend` runs append+check; CI runs `--check` against the
+committed ledger after `make bench-smoke`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+ROOT = Path(__file__).resolve().parents[1]
+LEDGER = ROOT / "BENCH_history.jsonl"
+BENCH = ROOT / "BENCH_simspeed.json"
+
+
+def load_ledger(path: Path = LEDGER) -> List[Dict]:
+    """Parsed ledger entries; unparsable lines are skipped with a note on
+    stderr (a corrupt line must not wedge the trend gate)."""
+    if not path.exists():
+        return []
+    out = []
+    for i, line in enumerate(path.read_text().splitlines()):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            print(f"bench_trend: skipping corrupt ledger line {i + 1}",
+                  file=sys.stderr)
+    return out
+
+
+def append_entry(entry: Dict, path: Path = LEDGER) -> None:
+    with path.open("a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+
+
+def entry_from_summary(summary: Dict, kind: str = "simspeed",
+                       label: str = "") -> Optional[Dict]:
+    """Ledger entry from a simspeed --summary-out dict (or the `current`
+    half of BENCH_simspeed.json). None when the summary has no sweep
+    section (nothing comparable to record)."""
+    sweep = summary.get("sweep")
+    if not sweep:
+        return None
+    meta = summary.get("meta", {})
+    return {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "kind": kind,
+        "label": label,
+        "sweep": {k: sweep[k] for k in
+                  ("cycles_per_s", "wall_s", "n_workloads", "n_cycles",
+                   "warmup") if k in sweep},
+        "scale": meta.get("sweep_scale",
+                          {"n_cycles": sweep.get("n_cycles"),
+                           "warmup": sweep.get("warmup")}),
+        "meta": {k: meta.get(k) for k in ("jax", "backend") if k in meta},
+    }
+
+
+def check(candidate: Dict, ledger: List[Dict],
+          tolerance: float = 0.20) -> Tuple[bool, str]:
+    """(ok, message): does `candidate` hold the ledger's recorded pace?
+
+    Compares candidate sweep cycles/s against the BEST same-scale ledger
+    entry; passes vacuously (with a note) when the ledger has no
+    comparable entry — a scale change must not hard-fail CI.
+    """
+    cps = candidate.get("sweep", {}).get("cycles_per_s")
+    if cps is None:
+        return False, "candidate has no sweep.cycles_per_s"
+    scale = candidate.get("scale")
+    peers = [e for e in ledger
+             if e.get("scale") == scale
+             and e.get("sweep", {}).get("cycles_per_s")]
+    if not peers:
+        return True, (f"no ledger entry at scale {scale}; "
+                      f"nothing to compare (pass)")
+    best = max(peers, key=lambda e: e["sweep"]["cycles_per_s"])
+    ref = best["sweep"]["cycles_per_s"]
+    floor = ref * (1.0 - tolerance)
+    ok = cps >= floor
+    verdict = "OK" if ok else "REGRESSION"
+    return ok, (f"{verdict}: {cps:.1f} cycles/s vs ledger best {ref:.1f} "
+                f"({best['ts']}, {best.get('label') or best['kind']}); "
+                f"floor at -{tolerance:.0%} is {floor:.1f}")
+
+
+def candidate_from_bench(bench_path: Path = BENCH) -> Optional[Dict]:
+    """The repo's committed snapshot (`current` half) as a ledger entry."""
+    if not bench_path.exists():
+        return None
+    data = json.loads(bench_path.read_text())
+    return entry_from_summary(data.get("current", {}), kind="simspeed",
+                              label="BENCH_simspeed.json current")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--append", action="store_true",
+                    help="append the candidate to the ledger")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on a throughput regression vs the "
+                         "best same-scale ledger entry")
+    ap.add_argument("--summary", type=Path, default=None,
+                    help="read the candidate from a simspeed --summary-out "
+                         "JSON instead of BENCH_simspeed.json")
+    ap.add_argument("--kind", default=None,
+                    help="entry kind for --append (default: simspeed, or "
+                         "smoke when --summary is given)")
+    ap.add_argument("--label", default="", help="free-form entry label")
+    ap.add_argument("--ledger", type=Path, default=LEDGER)
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional throughput drop (default 0.2)")
+    args = ap.parse_args(argv)
+    if not (args.append or args.check):
+        ap.error("nothing to do: pass --append and/or --check")
+
+    if args.summary is not None:
+        summary = json.loads(args.summary.read_text())
+        cand = entry_from_summary(summary, kind=args.kind or "smoke",
+                                  label=args.label or str(args.summary))
+    else:
+        cand = candidate_from_bench()
+        if cand is not None and args.kind:
+            cand["kind"] = args.kind
+        if cand is not None and args.label:
+            cand["label"] = args.label
+    if cand is None:
+        print("bench_trend: no sweep section in the candidate; nothing to "
+              "record or check", file=sys.stderr)
+        return 0 if args.check else 1
+
+    rc = 0
+    if args.check:
+        ok, msg = check(cand, load_ledger(args.ledger),
+                        tolerance=args.tolerance)
+        print(f"bench_trend: {msg}")
+        rc = 0 if ok else 1
+    if args.append:
+        append_entry(cand, args.ledger)
+        print(f"bench_trend: appended {cand['kind']} entry to "
+              f"{args.ledger.name}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,8 +16,11 @@ rows on stdout.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
+import logging
+import os
 import sys
 import time
 from pathlib import Path
@@ -33,19 +36,91 @@ from repro.core import workloads as wl
 from repro.core.params import SimConfig
 
 EXP_DIR = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+TRACE_DIR = Path(__file__).resolve().parents[1] / "experiments" / "trace"
 
 # Bump when the result schema or the semantics behind cached numbers change
 # (new measured columns, metric definition changes, engine behavior fixes).
 # The version rides in every cache key — old entries become unreachable —
 # AND inside every saved JSON, so `_load_cached`/`evict_stale` can delete
 # stale files instead of leaving them to shadow fresh results forever.
-CACHE_VERSION = "pr9-validate"
+CACHE_VERSION = "pr10-telemetry"
+
+# ---------------------------------------------------------------------------
+# diagnostics: a leveled logger (REPRO_LOG_LEVEL) + a structured JSONL trace
+# (REPRO_TRACE) replace the old raw [sweep-recover] prints. Both write to
+# stderr/files only — the CSV contract on stdout stays machine-parsable.
+# ---------------------------------------------------------------------------
+
+LOG = logging.getLogger("repro.bench")
+if not LOG.handlers:
+    _h = logging.StreamHandler(sys.stderr)
+    _h.setFormatter(logging.Formatter("[%(name)s %(levelname)s] %(message)s"))
+    LOG.addHandler(_h)
+    LOG.propagate = False
+LOG.setLevel(os.environ.get("REPRO_LOG_LEVEL", "WARNING").upper())
+
+_TRACE_FILE: Optional[Path] = None
+
+
+def trace_path() -> Optional[Path]:
+    """This process's JSONL trace file (None when REPRO_TRACE=0).
+
+    One file per process under experiments/trace/, opened lazily on the
+    first event so importing the harness never touches the filesystem.
+    """
+    global _TRACE_FILE
+    if os.environ.get("REPRO_TRACE", "1") == "0":
+        return None
+    if _TRACE_FILE is None:
+        TRACE_DIR.mkdir(parents=True, exist_ok=True)
+        _TRACE_FILE = TRACE_DIR / \
+            f"trace-{time.strftime('%Y%m%d-%H%M%S')}-{os.getpid()}.jsonl"
+    return _TRACE_FILE
+
+
+def trace_event(event: str, **fields) -> None:
+    """Append one structured event ({"ts", "event", ...}) to the trace."""
+    path = trace_path()
+    if path is None:
+        return
+    rec = {"ts": round(time.time(), 6), "event": event, **fields}
+    try:
+        with path.open("a") as f:
+            f.write(json.dumps(rec) + "\n")
+    except OSError as e:                     # tracing must never kill a sweep
+        LOG.debug("trace write failed: %r", e)
+
+
+@contextlib.contextmanager
+def trace_span(event: str, **fields):
+    """Span event: one record at exit with the measured `dur_s`."""
+    t0 = time.time()
+    try:
+        yield
+    finally:
+        trace_event(event, dur_s=round(time.time() - t0, 6), **fields)
+
+
+@contextlib.contextmanager
+def _maybe_profile(label: str):
+    """Opt-in `jax.profiler` capture around a dispatch: set
+    REPRO_PROFILE_DIR to a directory to record a TensorBoard-loadable
+    trace of the stacked program (off by default — profiling is not
+    free)."""
+    pdir = os.environ.get("REPRO_PROFILE_DIR")
+    if not pdir:
+        yield
+        return
+    import jax
+    with jax.profiler.trace(os.path.join(pdir, label)):
+        yield
 
 
 def _log_backoff(msg: str) -> None:
-    # recovery/degradation breadcrumbs go to stderr so the CSV contract on
-    # stdout stays machine-parsable
-    print(f"[sweep-recover] {msg}", file=sys.stderr)
+    # recovery/degradation breadcrumbs: WARNING level (visible by default)
+    # plus a machine-readable degradation-ladder trace event
+    LOG.warning("[sweep-recover] %s", msg)
+    trace_event("backoff", msg=msg)
 
 
 def _load_cached(path: Path, force: bool) -> Optional[Dict]:
@@ -60,7 +135,9 @@ def _load_cached(path: Path, force: bool) -> Optional[Dict]:
     except (json.JSONDecodeError, OSError):
         data, stale = None, True
     if stale:
-        _log_backoff(f"evicting stale/corrupt cache entry {path.name}")
+        # routine hygiene, not a degradation: INFO level, hidden by default
+        LOG.info("evicting stale/corrupt cache entry %s", path.name)
+        trace_event("cache_evict", file=path.name)
         path.unlink(missing_ok=True)
         return None
     return None if force else data
@@ -245,6 +322,8 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
     retries it) while every healthy slice is persisted per-slice as it
     completes. `strict=True` re-raises at the first failure instead.
     """
+    trace_event("sweep_begin", tag=tag or "std", policies=list(policies),
+                n_workloads=len(workloads), n_cycles=n_cycles)
     apool, aactive, amap = wl.alone_batch(cfg)
     n_alone = len(amap)
     pool, active = wl.pool_batch(cfg, workloads)
@@ -256,6 +335,7 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         path = EXP_DIR / f"{pol}_{key}.json"
         cached = _load_cached(path, force)
         if cached is not None:
+            trace_event("cache_hit", policy=pol, file=path.name)
             results[pol] = cached
             continue
         todo.append((pol, path, _load_alone(cfg, pol, n_cycles, warmup,
@@ -288,7 +368,9 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         pol, path, alone = item
         bp, ba = batch_for(alone is None)
         try:
-            dev = sim.simulate_async(cfg, pol, bp, ba, n_cycles, warmup)
+            # the async-dispatch span covers trace + compile + enqueue
+            with trace_span("compile_dispatch", policy=pol, stacked=False):
+                dev = sim.simulate_async(cfg, pol, bp, ba, n_cycles, warmup)
             fetch = lambda dev=dev: {k: np.asarray(v)
                                      for k, v in dev.items()}
         except Exception as e:
@@ -307,9 +389,11 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
             return
         bp, ba = batch_for(need_alone)
         try:
-            dev = sim.simulate_stacked_async(
-                cfg, tuple(p for p, _, _ in items), bp, ba, n_cycles,
-                warmup)
+            names = [p for p, _, _ in items]
+            with trace_span("compile_dispatch", policies=names,
+                            stacked=True), _maybe_profile("stacked_sweep"):
+                dev = sim.simulate_stacked_async(
+                    cfg, tuple(names), bp, ba, n_cycles, warmup)
         except Exception as e:
             if strict:
                 raise
@@ -335,8 +419,9 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         # by benchmarks/simspeed.py as sweep wall-clock
         t0 = time.time()
         try:
-            m = _fetch_recover(cfg, pol, pol, None, fetch, bp, ba,
-                               n_cycles, warmup, strict)
+            with trace_span("fetch", policy=pol):
+                m = _fetch_recover(cfg, pol, pol, None, fetch, bp, ba,
+                                   n_cycles, warmup, strict)
         except Exception as e:
             if strict:
                 raise
@@ -349,6 +434,7 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
             m = {k: v[n_alone:] for k, v in m.items()}
             alone = wl.alone_perf_lookup(cfg, am, amap)
             _save_alone(cfg, pol, n_cycles, warmup, alone)
+            trace_event("alone_baseline", policy=pol, n_rows=n_alone)
         perf = sim.perf_vector(cfg, m, pool)
         rows = [met.workload_metrics(cfg, w, perf[i], alone)
                 for i, w in enumerate(workloads)]
@@ -373,6 +459,8 @@ def run_sweep(cfg: SimConfig, policies: Sequence[str],
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(out, indent=1))
         results[pol] = out
+    trace_event("sweep_end", tag=tag or "std",
+                errors=[p for p, r in results.items() if "error" in r])
     return {pol: results[pol] for pol in policies}
 
 
@@ -434,6 +522,8 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
         path = EXP_DIR / f"grid_{polname}_{key}.json"
         cached = _load_cached(path, force)
         if cached is not None:
+            trace_event("cache_hit", policy=polname, label=label,
+                        file=path.name)
             results[label] = cached
         else:
             todo.append((polname, label, ov, path))
@@ -451,9 +541,12 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
             singles.append(items[0])
             return
         try:
-            dev = sim.simulate_stacked_grid_async(
-                cfg, [(p, ov) for p, _, ov, _ in items],
-                batch_pool, batch_active, n_cycles, warmup)
+            with trace_span("compile_dispatch", stacked=True, grid=True,
+                            labels=[it[1] for it in items]), \
+                    _maybe_profile("stacked_grid"):
+                dev = sim.simulate_stacked_grid_async(
+                    cfg, [(p, ov) for p, _, ov, _ in items],
+                    batch_pool, batch_active, n_cycles, warmup)
         except Exception as e:
             if strict:
                 raise
@@ -481,8 +574,11 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
         gcfg = cfg.replace(**dict(per))
         points = [params.split_overrides(it[2])[1] for it in items]
         try:
-            dev = sim.simulate_grid_async(gcfg, polname, points, batch_pool,
-                                          batch_active, n_cycles, warmup)
+            with trace_span("compile_dispatch", policy=polname, grid=True,
+                            labels=[it[1] for it in items]):
+                dev = sim.simulate_grid_async(gcfg, polname, points,
+                                              batch_pool, batch_active,
+                                              n_cycles, warmup)
             box = {}
             for idx, it in enumerate(items):
                 pending.append((it, _stacked_fetch(dev, idx, box)))
@@ -498,9 +594,10 @@ def run_grid(cfg: SimConfig, specs: Sequence, workloads: Sequence[wl.Workload],
         t0 = time.time()
         per, point = params.split_overrides(ov)
         try:
-            m = _fetch_recover(cfg.replace(**per), polname, label, point,
-                               fetch, batch_pool, batch_active, n_cycles,
-                               warmup, strict)
+            with trace_span("fetch", policy=polname, label=label):
+                m = _fetch_recover(cfg.replace(**per), polname, label,
+                                   point, fetch, batch_pool, batch_active,
+                                   n_cycles, warmup, strict)
         except Exception as e:
             if strict:
                 raise

@@ -1,0 +1,162 @@
+"""Interference timelines: the paper's §4 burst-starvation story, rendered.
+
+End-of-run aggregates can't show the episodes the paper argues about: a
+duty-cycled accelerator burst arrives, the shared queues fill, CPU requests
+stall behind the stream, then the burst drains and service recovers. This
+figure runs a GPU-bursty 3-class mix (frame-driven HWA accelerators next to
+the CPU cores and GPU — the repo's model of duty-cycled bursts, see
+`workloads.bursty_batch`) through the stacked `run_sweep` path with the
+flight recorder on, then renders per-epoch timelines for every registry
+policy from `metrics.timeline_breakdown`:
+
+  * `occ_cpu` / `lat_cpu` — CPU queue depth and the Little's-law latency
+    proxy per epoch: the starvation spikes themselves;
+  * `occ_hwa`, `row_hit_rate`, `pd_frac` — what the burst does to the rest
+    of the system.
+
+The headline check: SMS's staged admission smooths the bursts. Its
+steady-state CPU latency is HIGHER than the centralized policies' (the
+per-source FIFOs add batch-formation wait — the paper's acknowledged
+trade), so the honest smoothing statistic is the RELATIVE spike
+amplitude: (max-over-epochs minus median) / median, over post-warmup
+epochs. `--check` enforces that SMS's relative spike stays below the
+best centralized policy's (best = highest weighted speedup among the
+centralized family); the summary table also shows the burst's shared-
+queue footprint (`occ_hwa_max` — roughly halved under SMS, the batches
+wait in source FIFOs instead of flooding the scheduler).
+
+Output convention: per-policy summary table and a per-epoch `lat_cpu`
+timeline CSV on stdout, then the ``fig_timeline,us_per_call,derived`` row.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import metrics as met
+from repro.core import workloads as wl
+from repro.core.params import SimConfig
+
+
+def timeline_config(n_cpu: int = 4, n_hwa: int = 2, n_channels: int = 2,
+                    total_cycles: int = 14_000) -> SimConfig:
+    """QoS parity config with the flight recorder sized to retain the whole
+    run: epoch fixed at 256 cycles, window grown to cover `total_cycles`."""
+    epoch = 256
+    window = -(-total_cycles // epoch)          # ceil: no epoch falls off
+    return common.parity_config(n_cpu=n_cpu, n_channels=n_channels,
+                                n_hwa=n_hwa, telemetry_enabled=True,
+                                telemetry_epoch=epoch,
+                                telemetry_window=window)
+
+
+def _timelines(cfg: SimConfig, res: dict, total_cycles: int) -> dict:
+    m = {"telemetry": np.asarray(res["measured"]["telemetry"])[None],
+         "telemetry_epoch": np.asarray([res["measured"]["telemetry_epoch"]])}
+    tb = met.timeline_breakdown(cfg, m, total_cycles=total_cycles)
+    return {k: v[0] for k, v in tb.items()}
+
+
+def spike_amplitude(series: np.ndarray, valid: np.ndarray) -> float:
+    """Max-over-epochs minus median: how far the worst episode rises above
+    steady state (0 for a flat timeline, large for starvation bursts)."""
+    v = series[valid]
+    return float(v.max() - np.median(v)) if v.size else 0.0
+
+
+def rel_spike(series: np.ndarray, valid: np.ndarray) -> float:
+    """Spike amplitude normalized by the steady-state (median) level, so
+    policies with different baseline latencies are comparable: 0.10 means
+    the worst episode rises 10% above steady state."""
+    v = series[valid]
+    if not v.size:
+        return 0.0
+    med = float(np.median(v))
+    return (float(v.max()) - med) / max(med, 1e-9)
+
+
+def main(n_per_cat: int = 4, n_cycles: int = 12_000, warmup: int = 2_000,
+         force: bool = False, strict: bool = False,
+         check: bool = False) -> dict:
+    t0 = time.time()
+    total = warmup + n_cycles
+    cfg = timeline_config(total_cycles=total)
+    wls = wl.make_workloads(cfg.n_cpu, n_per_cat=n_per_cat, seed=13,
+                            n_hwa=cfg.n_hwa)
+    policies = list(common.POLICIES)
+    results = common.run_sweep(cfg, policies, wls, n_cycles=n_cycles,
+                               warmup=warmup, tag="timeline", force=force,
+                               strict=strict)
+
+    tls, spikes = {}, {}
+    print("policy,lat_cpu_spike,lat_cpu_rel_spike,lat_cpu_median,"
+          "occ_cpu_max,occ_hwa_max,row_hit_rate,weighted_speedup")
+    for pol, res in results.items():
+        if "error" in res:
+            print(f"{pol},ERROR:{res['error']}")
+            continue
+        tb = _timelines(cfg, res, total)
+        tls[pol] = tb
+        # headline stats over post-warmup epochs only: the cold-start ramp
+        # (empty queues filling) is not burst interference
+        v = tb["valid"] & (tb["epoch"] * cfg.telemetry_epoch >= warmup)
+        spikes[pol] = rel_spike(tb["lat_cpu"], v)
+        print(f"{pol},{spike_amplitude(tb['lat_cpu'], v):.2f},"
+              f"{spikes[pol]:.3f},"
+              f"{np.median(tb['lat_cpu'][v]):.2f},"
+              f"{tb['occ_cpu'][v].max():.3f},{tb['occ_hwa'][v].max():.3f},"
+              f"{np.mean(tb['row_hit_rate'][v]):.3f},"
+              f"{res['agg']['weighted_speedup']:.3f}")
+
+    # per-epoch CPU latency proxy, one column per policy: the burst
+    # episodes and each policy's smoothing are directly visible
+    pols = list(tls)
+    ref = tls[pols[0]]
+    print("\nepoch_cycle," + ",".join(pols))
+    for j in np.where(ref["valid"])[0]:
+        row = ",".join(f"{tls[p]['lat_cpu'][j]:.2f}" for p in pols)
+        print(f"{int(ref['epoch'][j]) * cfg.telemetry_epoch},{row}")
+
+    centralized = [p for p in pols
+                   if not p.startswith("sms") and "error" not in results[p]]
+    best = max(centralized,
+               key=lambda p: results[p]["agg"]["weighted_speedup"])
+    ok = "sms" in spikes and spikes["sms"] <= spikes[best]
+    us = (time.time() - t0) * 1e6 / max(len(policies), 1)
+    common.emit(
+        "fig_timeline", us,
+        f"sms_rel_spike={spikes.get('sms', float('nan')):.3f};"
+        f"best_centralized={best}:{spikes.get(best, float('nan')):.3f};"
+        f"sms_smoother={ok}")
+    if check and not ok:
+        print(f"fig_timeline: SMS relative spike {spikes.get('sms'):.3f} "
+              f"NOT below best centralized ({best}) {spikes.get(best):.3f}",
+              file=sys.stderr)
+        sys.exit(1)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale: quick plumbing check, not a result")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless SMS's CPU-latency spike amplitude "
+                         "is below the best centralized policy's")
+    ap.add_argument("--strict", dest="strict", action="store_true",
+                    help="re-raise on the first failing sweep slice")
+    ap.add_argument("--tolerant", dest="strict", action="store_false",
+                    help="degrade failing slices and report the healthy "
+                         "remainder (default)")
+    ap.set_defaults(strict=False)
+    args = ap.parse_args()
+    if args.smoke:
+        main(n_per_cat=1, n_cycles=2_000, warmup=500, force=args.force,
+             strict=args.strict, check=args.check)
+    else:
+        main(force=args.force, strict=args.strict, check=args.check)

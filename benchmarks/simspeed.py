@@ -186,8 +186,13 @@ def measure_knob_grid(n_cycles: int = 260, warmup: int = 60) -> Dict:
     sim.simulate_stacked_grid(cfg, slices, pool, active, n_cycles, warmup)
     wall = time.time() - t0
     after = compat.jit_cache_size(sim._sim_batch_stacked_grid)
+    t0 = time.time()
+    sim.simulate_stacked_grid(cfg, slices, pool, active, n_cycles, warmup)
+    steady = time.time() - t0
     return {"policies": fam, "n_variants": len(variants),
             "grid_points": len(slices), "wall_s": round(wall, 2),
+            "steady_s": round(steady, 3),
+            "compile_s": round(wall - steady, 3),
             "xla_programs": after - before}
 
 
@@ -224,17 +229,20 @@ def measure_event_skip(n_per_cat: int, n_cycles: int, warmup: int) -> Dict:
     XLA program. Skip ratios come from the `sim_steps` metric
     (family-common: the stacked slices share one loop).
     """
+    t_sec = time.time()
     out = {"n_cycles": n_cycles, "warmup": warmup}
     cfgb = common.parity_config(n_cpu=4, n_hwa=2)
     famb = list(sim.stackable_names(cfgb))
     bpool, bact = wl.bursty_batch(cfgb)
     rows = [({k: v[i:i + 1] for k, v in bpool.items()}, bact[i:i + 1])
             for i in range(len(wl.BURSTY_ARCHETYPES))]
-    programs = {}
+    programs, compiles = {}, {}
     for mode, skip in (("ticked", False), ("skipping", True)):
         before = compat.jit_cache_size(sim._sim_batch_stacked)
+        t0 = time.time()
         sim.simulate_stacked(cfgb, famb, *rows[0], n_cycles, warmup,
                              skip=skip)
+        compiles[mode] = time.time() - t0   # first call: trace+compile+run
         programs[mode] = compat.jit_cache_size(sim._sim_batch_stacked) \
             - before
     per, tick_total, skip_total = {}, 0.0, 0.0
@@ -263,6 +271,16 @@ def measure_event_skip(n_per_cat: int, n_cycles: int, warmup: int) -> Dict:
         "speedup_x": round(tick_total / max(skip_total, 1e-9), 2),
         "ticked_xla_programs": programs["ticked"],
         "skipping_xla_programs": programs["skipping"],
+        # first-call wall (trace+compile+run) per mode; the steady walls
+        # above subtract out as the compile-time share for the CI artifact
+        "ticked_first_call_s": round(compiles["ticked"], 3),
+        "skipping_first_call_s": round(compiles["skipping"], 3),
+        "ticked_compile_s": round(
+            compiles["ticked"] - per[wl.BURSTY_ARCHETYPES[0]]
+            ["ticked_wall_s"], 3),
+        "skipping_compile_s": round(
+            compiles["skipping"] - per[wl.BURSTY_ARCHETYPES[0]]
+            ["skipping_wall_s"], 3),
     }
 
     cfgs = common.parity_config()
@@ -272,20 +290,91 @@ def measure_event_skip(n_per_cat: int, n_cycles: int, warmup: int) -> Dict:
     sres = {"n_workloads": len(wls)}
     for mode, skip in (("ticked", False), ("skipping", True)):
         before = compat.jit_cache_size(sim._sim_batch_stacked)
+        t0 = time.time()
         sim.simulate_stacked(cfgs, fams, pool, active, n_cycles, warmup,
                              skip=skip)
+        sres[f"{mode}_first_call_s"] = round(time.time() - t0, 3)
         sres[f"{mode}_xla_programs"] = \
             compat.jit_cache_size(sim._sim_batch_stacked) - before
         t0 = time.time()
         m = sim.simulate_stacked(cfgs, fams, pool, active, n_cycles,
                                  warmup, skip=skip)
         sres[f"{mode}_wall_s"] = round(time.time() - t0, 3)
+        sres[f"{mode}_compile_s"] = round(
+            sres[f"{mode}_first_call_s"] - sres[f"{mode}_wall_s"], 3)
     sres["speedup_x"] = round(sres["ticked_wall_s"]
                               / max(sres["skipping_wall_s"], 1e-9), 2)
     sres["mean_skip_ratio"] = round(
         1.0 - float(np.mean(m[fams[0]]["sim_steps"])) / n_cycles, 3)
     out["fig4_mix"] = sres
+    out["wall_s"] = round(time.time() - t_sec, 2)
     return out
+
+
+def measure_telemetry_gate(n_cycles: int = 280, warmup: int = 70) -> Dict:
+    """Flight-recorder contract gates (ROADMAP "Telemetry contract").
+
+    OFF must add ZERO primitives to the per-cycle jaxpr: telemetry's entry
+    points are poisoned and both drivers re-traced — any residual call
+    raises (the poisoned-entry pattern from tests/test_telemetry.py). ON
+    must keep the stacked family at ONE XLA program (distinct static args
+    keep its jit cache entry separate from every other scale here), and
+    must strictly grow the step jaxpr (non-vacuity: the gate separates).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import policy as policy_api
+    from repro.core import telemetry
+
+    cfg_off = common.parity_config(n_cpu=3)
+    cfg_on = cfg_off.replace(telemetry_enabled=True, telemetry_window=8,
+                             telemetry_epoch=64)
+
+    def n_prims(cfg, poisoned):
+        saved = {f: getattr(telemetry, f)
+                 for f in ("snapshot", "tick_accrue", "skip_accrue")}
+
+        def boom(*a, **k):
+            raise AssertionError("telemetry entry point reached while off")
+        try:
+            if poisoned:
+                for f in saved:
+                    setattr(telemetry, f, boom)
+            rcfg, pol, carry = sim._init(cfg, "frfcfs")
+            pool = sim.prepare_pool(
+                {"mpki": np.ones((rcfg.n_src,), np.float32),
+                 "inst_per_miss": np.full((rcfg.n_src,), 100.0, np.float32),
+                 "rbl": np.full((rcfg.n_src,), 0.5, np.float32),
+                 "blp": np.ones((rcfg.n_src,), np.int32),
+                 "is_gpu": np.zeros((rcfg.n_src,), bool)},
+                (rcfg.n_src,))
+            active = jnp.ones((rcfg.n_src,), bool)
+            step = policy_api.make_step(rcfg, pol, pool, active)
+            jx = jax.make_jaxpr(step)(carry, jnp.int32(5))
+            skip = policy_api.make_skip_step(rcfg, pol, pool, active)
+            jax.make_jaxpr(lambda c, t: skip(c, t, jnp.int32(400))
+                           )(carry, jnp.int32(5))
+            return sum(1 for _ in compat.walk_primitives(jx.jaxpr))
+        finally:
+            for f, fn in saved.items():
+                setattr(telemetry, f, fn)
+
+    off_prims = n_prims(cfg_off, poisoned=True)   # raises if gate leaks
+    on_prims = n_prims(cfg_on, poisoned=False)
+    fam = list(sim.stackable_names(cfg_on))
+    wls = wl.make_workloads(cfg_on.n_cpu, n_per_cat=1)
+    pool, active = wl.pool_batch(cfg_on, wls)
+    before = compat.jit_cache_size(sim._sim_batch_stacked)
+    sim.simulate_stacked(cfg_on, fam, pool, active, n_cycles, warmup)
+    after = compat.jit_cache_size(sim._sim_batch_stacked)
+    return {
+        "off_zero_prims": True,                   # poisoned trace survived
+        "step_prims_off": off_prims,
+        "step_prims_on": on_prims,
+        "on_grows_jaxpr": on_prims > off_prims,
+        "xla_programs": after - before,
+        "policies": fam,
+    }
 
 
 def main(sweep_scale: Dict = None, policy_scale: Dict = None,
@@ -330,6 +419,11 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
           f"ratios={event['bursty']['skip_ratio']}); fig4 mix "
           f"{event['fig4_mix']['speedup_x']}x at mean skip ratio "
           f"{event['fig4_mix']['mean_skip_ratio']}")
+    tel = measure_telemetry_gate()
+    print(f"  telemetry: off adds 0 prims (poisoned trace ok, "
+          f"{tel['step_prims_off']} prims), on grows jaxpr to "
+          f"{tel['step_prims_on']} and stays {tel['xla_programs']} "
+          f"stacked program")
 
     current = {
         "meta": {
@@ -347,6 +441,7 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         "nclass_smoke": nclass,
         "knob_grid": knob_grid,
         "event_skip": event,
+        "telemetry_gate": tel,
     }
     # CI gate (bench-smoke): the whole stackable family must ride ONE XLA
     # program through the sweep — with energy accounting enabled (asserted
@@ -374,6 +469,13 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         # cycle counts; a collapse here means witnesses got conservative
         "bursty_min_skip_ratio_ok":
             event["bursty"]["skip_ratio"]["idle_cpu"] >= 0.5,
+        # flight recorder: OFF must add zero primitives to the hot loop
+        # (poisoned entry points + an unchanged trace prove it), ON must
+        # not de-stack the family — and must actually change the jaxpr,
+        # or the zero-prims gate would be vacuous
+        "telemetry_off_zero_prims":
+            tel["off_zero_prims"] and tel["on_grows_jaxpr"],
+        "telemetry_one_program": tel["xla_programs"] == 1,
     }
     if summary_out:
         Path(summary_out).write_text(json.dumps(
@@ -393,6 +495,10 @@ def main(sweep_scale: Dict = None, policy_scale: Dict = None,
         f"fig4={event['fig4_mix']['skipping_xla_programs']} programs"
     assert gates["bursty_min_skip_ratio_ok"], \
         f"idle_cpu skip ratio collapsed: {event['bursty']['skip_ratio']}"
+    assert gates["telemetry_off_zero_prims"], \
+        f"telemetry gate leaked into the off path: {tel}"
+    assert gates["telemetry_one_program"], \
+        f"telemetry de-stacked the family: {tel['xla_programs']} programs"
     data = {}
     if BENCH_PATH.exists():
         data = json.loads(BENCH_PATH.read_text())

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, qos, validate
+from repro.core import energy, qos, telemetry, validate
 from repro.core.params import (CLS_CPU, CLS_GPU, CLS_HWA, SimConfig,
                                SourcePool)
 
@@ -162,6 +162,8 @@ def dram_state(cfg: SimConfig) -> Dict[str, Any]:
         **qos.qos_state(cfg),
         # invariant-sanitizer counters (empty when cfg.validate_enabled off)
         **validate.validate_state(cfg),
+        # flight-recorder ring (empty when cfg.telemetry_enabled off)
+        **telemetry.telemetry_state(cfg),
     }
 
 

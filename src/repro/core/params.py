@@ -127,6 +127,15 @@ class SimConfig:
     lat_bin_width: int = 64          # cycles per bin (last bin open-ended):
                                      # 2048-cycle range covers the queueing
                                      # tails that p99 actually lives in
+    # windowed flight recorder (repro.core.telemetry): a (W, K) ring of
+    # epoch-downsampled time-series channels in dram_state. Measurement-
+    # only like energy/qos/validate — flipping `telemetry_enabled` cannot
+    # change a scheduling decision, and OFF adds zero primitives to the
+    # hot loop. Window/epoch set ARRAY SHAPES, so they are static config
+    # fields (like lat_bins), never value knobs.
+    telemetry_enabled: bool = False
+    telemetry_window: int = 32       # ring slots (last W epochs retained)
+    telemetry_epoch: int = 256       # cycles per epoch (downsample factor)
     timing: Timing = Timing()
 
     @property

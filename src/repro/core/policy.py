@@ -43,7 +43,7 @@ from typing import Any, Callable, Dict, Iterator, Optional, Protocol, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, engine, params, validate
+from repro.core import energy, engine, params, telemetry, validate
 from repro.core.params import Knobs, SimConfig
 
 
@@ -194,12 +194,16 @@ def make_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
 
     def step(carry, t):
         st, sched, dram = carry
+        if cfg.telemetry_enabled:
+            snap = telemetry.snapshot(st, sched, dram)
         st, dram = engine.completions_tick(st, dram, t)
         dram = energy.background_tick(cfg, dram, t)
         st = engine.deadline_tick(cfg, pool, st, t)
         st = engine.source_tick(cfg, pool, st, active, t)
         st, sched = pol.tick(cfg, pool, st, sched, t)
         st, sched, dram = pol.select(cfg, pool, st, sched, dram, t)
+        if cfg.telemetry_enabled:
+            dram = telemetry.tick_accrue(cfg, pool, snap, st, sched, dram, t)
         if cfg.validate_enabled:
             # conservation laws hold as end-of-cycle identities
             dram = dict(dram)
@@ -236,6 +240,9 @@ def make_skip_step(cfg: SimConfig, pol: MemoryPolicy, pool, active):
         t_new = jnp.minimum(te, t_end)
         k = t_new - t - 1                       # skipped cycles, >= 0
         st = engine.skip_sources(cfg, pool, st, active, k)
+        if cfg.telemetry_enabled:
+            # before energy.skip_accrue: reads the pre-span pd_down
+            dram = telemetry.skip_accrue(cfg, pool, st, dram, t, t_new)
         dram = energy.skip_accrue(cfg, dram, t, t_new)
         if on_skip is not None:
             sched = on_skip(cfg, sched, k)

@@ -46,7 +46,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import energy, engine, params, validate
+from repro.core import energy, engine, params, telemetry, validate
 from repro.core.params import SimConfig
 
 AGE_CAP = (1 << 14) - 1
@@ -480,6 +480,8 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active, cfgs=None,
 
     def step(carry, t):
         st, buf, dram = carry
+        if cfg.telemetry_enabled:
+            snap = vP(telemetry.snapshot)(st, buf, dram)
         st, dram = vP(lambda s, d: engine.completions_tick(s, d, t)
                       )(st, dram)
         if knobs is None:
@@ -526,6 +528,11 @@ def make_stacked_step(cfg: SimConfig, pols, pool, active, cfgs=None,
                              for k in issue_union}}
         buf = vP(lambda b, d, pk, sr: clear_picked(cfg, pool, b, d, pk, sr)
                  )(buf, do, pick, src)
+        if cfg.telemetry_enabled:
+            # policy-independent accrual (no value knobs read): vmap over
+            # P like the engine work rather than dispatching per slice
+            dram = vP(lambda sn, s, b, d: telemetry.tick_accrue(
+                cfg, pool, sn, s, b, d, t))(snap, st, buf, dram)
         if cfg.validate_enabled:
             # conservation laws dispatch per slice like the other hooks
             # (policy invariants differ per policy object)
@@ -587,6 +594,16 @@ def make_stacked_skip_step(cfg: SimConfig, pols, pool, active, cfgs=None,
         t_new = jnp.minimum(te, t_end)
         k = t_new - t - 1
         st = vP(lambda s: engine.skip_sources(cfg, pool, s, active, k))(st)
+        if cfg.telemetry_enabled:
+            # before energy.skip_accrue (pre-span pd_down); the power-down
+            # entry threshold is a value knob, so bind per slice on grids
+            if knobs is None:
+                dram = vP(lambda s, d: telemetry.skip_accrue(
+                    cfg, pool, s, d, t, t_new))(st, dram)
+            else:
+                dram = vP(lambda s, d, kn: telemetry.skip_accrue(
+                    params.bind(cfg, kn), pool, s, d, t, t_new)
+                    )(st, dram, knobs)
         if knobs is None:
             dram = vP(lambda d: energy.skip_accrue(cfg, d, t, t_new))(dram)
         else:

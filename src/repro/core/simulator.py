@@ -150,6 +150,13 @@ def _scan_and_measure(cfg: SimConfig, step, skip_body, carry, n_cycles: int,
         # violation is still a violation. (NV,) per sim — see
         # `validate.VIOLATIONS` for the layout, `validate.summarize` to name
         out["violations"] = dram_f["viol"].astype(jnp.float32)
+    if "tl_ring" in dram_f:
+        # flight-recorder ring is WINDOWED, not delta-measured: the last W
+        # epochs of the whole run are the measurement. (W, K) per sim plus
+        # the final epoch pointer that maps slots back to epochs — see
+        # `telemetry.CHANNELS` / `metrics.timeline_breakdown`.
+        out["telemetry"] = dram_f["tl_ring"].astype(jnp.float32)
+        out["telemetry_epoch"] = dram_f["tl_epoch"].astype(jnp.float32)
     for k, name in _SCHED_SNAP.items():
         if k in sched_snap:
             out[name] = sched_f[k].astype(jnp.float32) \

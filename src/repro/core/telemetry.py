@@ -1,0 +1,223 @@
+"""Windowed flight recorder: time-resolved counters inside the hot loop.
+
+The paper's claims are *dynamic* — GPU/HWA bursts starve CPU cores until
+the staged design smooths them (§4) — but end-of-run aggregates average
+those episodes away. This module keeps a `(W, K)` ring of epoch-downsampled
+channels in `dram_state`: cycle time is split into epochs of
+`cfg.telemetry_epoch` cycles, epoch `e` accumulates into ring slot
+`e % cfg.telemetry_window`, and a slot is zeroed exactly when it starts
+representing a newer epoch. The final ring therefore holds the last W
+epochs of the run — a flight recorder, not a full trace — at O(W*K) state
+independent of run length.
+
+Channels (`CHANNELS` order; all int32 accumulators, zero-init):
+
+  occ_*        sum over cycles of end-of-cycle in-flight requests per
+               class (divide by epoch width for mean queue depth; by
+               Little's law occ/issue-rate is a latency proxy);
+  adm_*        admissions per class (pending register consumed);
+  iss_*        DRAM issues per class;
+  row_hits     row-hit issues (all classes; hits/issues = hit rate);
+  batch_marks  newly marked batch entries in the centralized buffer
+               (PAR-BS/BLISS-style marking; 0 for SMS, whose staged
+               batches are visible through occ/iss instead);
+  pd_chan      sum over cycles of channels in power-down at end of cycle
+               (residency; requires `energy_enabled`, else 0);
+  steps        processed driver steps — the skip meter. Every channel
+               BEFORE this one is driver-invariant (ticked and
+               variable-step runs produce bit-identical values); `steps`
+               is a driver property like `sim_steps` and is deliberately
+               last so comparisons can slice it off.
+
+Contract (ROADMAP "Telemetry contract", same shape as energy/validate):
+gated by static `cfg.telemetry_enabled` — OFF adds zero primitives to the
+per-cycle jaxpr (the state dict is empty and every call site is a Python
+branch); ON never feeds a value back into admission, scoring, or timing,
+so golden digests stay bit-identical. Span-exact: the variable-step driver
+charges a whole skipped span with `skip_accrue` below — frozen occupancy
+and the closed-form power-down split, the same integer-counter argument as
+`energy.skip_accrue` — so no new witnesses are needed and ticked vs
+skipping rings agree bit-for-bit (minus `steps`). All accumulation is
+one-hot masked adds on static (W, K) shapes; zero is a safe padding value,
+so the ring rides the stacked carry and the grid paths unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import N_CLASSES, SimConfig
+
+CHANNELS = (
+    "occ_cpu", "occ_gpu", "occ_hwa",
+    "adm_cpu", "adm_gpu", "adm_hwa",
+    "iss_cpu", "iss_gpu", "iss_hwa",
+    "row_hits", "batch_marks", "pd_chan",
+    "steps",
+)
+K = len(CHANNELS)
+CH = {name: i for i, name in enumerate(CHANNELS)}
+# channels below this index are driver-invariant; `steps` is the skip meter
+N_INVARIANT = CH["steps"]
+
+# dram_state keys owned by this module (golden-digest whitelists)
+STATE_KEYS = ("tl_ring", "tl_epoch")
+
+
+def telemetry_state(cfg: SimConfig) -> Dict[str, Any]:
+    """Flight-recorder state merged into `engine.dram_state` when enabled.
+
+    tl_ring: (W, K) channel accumulators; tl_epoch: the newest epoch the
+    ring has been advanced to (scalar). Zero-init doubles as safe padding.
+    """
+    if not cfg.telemetry_enabled:
+        return {}
+    return {
+        "tl_ring": jnp.zeros((cfg.telemetry_window, K), jnp.int32),
+        "tl_epoch": jnp.zeros((), jnp.int32),
+    }
+
+
+def _slot_epochs(W: int, e):
+    """The newest epoch <= e that each of the W ring slots represents:
+    slot s holds epoch e - ((e - s) mod W). Uniform in e, so advancing the
+    ring from any epoch to any later epoch — ticked increments and
+    arbitrary span jumps alike — is the same one formula."""
+    s = jnp.arange(W, dtype=jnp.int32)
+    return e - jnp.mod(e - s, W)
+
+
+def _advance(W: int, ring, e_old, e_new):
+    """Zero every slot whose represented epoch moved past its old one."""
+    stale = _slot_epochs(W, e_new) > _slot_epochs(W, e_old)
+    return jnp.where(stale[:, None], 0, ring)
+
+
+def _class_sums(cls, v):
+    """(S,) int values -> (N_CLASSES,) per-class sums (one-hot masked)."""
+    v = v.astype(jnp.int32)
+    return jnp.stack([jnp.sum(jnp.where(cls == c, v, 0))
+                      for c in range(N_CLASSES)])
+
+
+def snapshot(st, sched, dram) -> Dict[str, Any]:
+    """Pre-step counter snapshot; post-step deltas yield this cycle's
+    events without touching `engine.issue_channels` or any policy hook."""
+    snap = {
+        "emitted": st["emitted"],
+        "pend_valid": st["pend_valid"],
+        "issued": dram["issued"],
+        "hits": dram["hits"],
+    }
+    if "marked" in sched:
+        snap["marked"] = sched["marked"]
+    return snap
+
+
+def tick_accrue(cfg: SimConfig, pool, snap, st, sched, dram, t
+                ) -> Dict[str, Any]:
+    """Charge cycle t's end-of-cycle values into the ring (one-hot add).
+
+    Runs after the policy's select — occupancy/power-down are end-of-cycle
+    samples, event channels are post-minus-pre deltas against `snap`.
+    """
+    W, E = cfg.telemetry_window, cfg.telemetry_epoch
+    e = (t // E).astype(jnp.int32)
+    ring = _advance(W, dram["tl_ring"], dram["tl_epoch"], e)
+    cls = pool["src_class"]
+    # admission = pending register consumed: it was (or became) valid this
+    # cycle and is no longer; at most one emission per source per cycle
+    want = (st["emitted"] - snap["emitted"]) > 0
+    admitted = (snap["pend_valid"] | want) & ~st["pend_valid"]
+    occ = _class_sums(cls, st["outstanding"])
+    adm = _class_sums(cls, admitted)
+    iss = _class_sums(cls, dram["issued"] - snap["issued"])
+    hits = jnp.sum(dram["hits"] - snap["hits"])
+    if "marked" in snap:
+        marks = jnp.sum(sched["marked"] & ~snap["marked"]).astype(jnp.int32)
+    else:
+        marks = jnp.int32(0)
+    if "pd_down" in dram:
+        pd = jnp.sum(dram["pd_down"].astype(jnp.int32))
+    else:
+        pd = jnp.int32(0)
+    inc = jnp.concatenate([
+        occ, adm, iss,
+        jnp.stack([hits, marks, pd, jnp.int32(1)]),
+    ]).astype(jnp.int32)
+    onehot = (jnp.arange(W, dtype=jnp.int32) == jnp.mod(e, W))
+    dram = dict(dram)
+    dram["tl_ring"] = ring + onehot[:, None].astype(jnp.int32) * inc[None, :]
+    dram["tl_epoch"] = e
+    return dram
+
+
+def skip_accrue(cfg: SimConfig, pool, st, dram, t, t_new) -> Dict[str, Any]:
+    """Charge the jumped span t+1 .. t_new-1 in one add — exactly what the
+    ticked driver's per-cycle `tick_accrue` would have recorded.
+
+    Valid under the witness contract: no admission, issue, completion,
+    emission, or batch-mark lands strictly inside a span, so the event
+    channels add zero, occupancy is frozen, and the only power-down
+    transition is standby -> power-down at `enter = busy_until +
+    energy_pd_idle` (split in closed form, mirroring
+    `energy.skip_accrue`). MUST run BEFORE `energy.skip_accrue` at the
+    call site: it reads the pre-span `pd_down`, which energy's final OR
+    overwrites. `steps` adds nothing — skipped cycles are not processed
+    steps; that is the skip meter's definition, not an approximation.
+    """
+    W, E = cfg.telemetry_window, cfg.telemetry_epoch
+    a, b = t + 1, t_new - 1                      # empty when t_new == t+1
+    eb = b // E
+    e_s = _slot_epochs(W, eb)
+    lo = jnp.maximum(e_s * E, a)
+    hi = jnp.minimum(e_s * E + E - 1, b)
+    n_s = jnp.clip(hi - lo + 1, 0, E)            # span cycles per slot (W,)
+    ring = _advance(W, dram["tl_ring"], dram["tl_epoch"], eb)
+    cls = pool["src_class"]
+    occ = _class_sums(cls, st["outstanding"])    # frozen during the span
+    zeros = jnp.zeros((W,), jnp.int32)
+    cols = [n_s * occ[c] for c in range(N_CLASSES)]         # occ_*
+    cols += [zeros] * (2 * N_CLASSES + 2)        # adm_*, iss_*, hits, marks
+    if "pd_down" in dram:
+        # per slot x channel: cycles u in the slot's span overlap with
+        # end-of-cycle pd_down, i.e. pd_pre | (u >= enter)
+        enter = dram["busy_until"] + cfg.energy_pd_idle
+        cnt = jnp.where(
+            dram["pd_down"][None, :], n_s[:, None],
+            jnp.clip(hi[:, None] - jnp.maximum(enter[None, :],
+                                               lo[:, None]) + 1,
+                     0, n_s[:, None]))
+        cols.append(jnp.sum(cnt, axis=1).astype(jnp.int32))
+    else:
+        cols.append(zeros)
+    cols.append(zeros)                           # steps: skip meter
+    dram = dict(dram)
+    dram["tl_ring"] = ring + jnp.stack(cols, axis=1)
+    dram["tl_epoch"] = jnp.maximum(dram["tl_epoch"], eb)
+    return dram
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers (numpy-friendly; used by metrics.timeline_breakdown)
+# ---------------------------------------------------------------------------
+
+def ring_epochs(W: int, final_epoch):
+    """Epoch index held by each ring slot at end of run (negative => the
+    slot was never written and still holds zeros)."""
+    import numpy as np
+    s = np.arange(W)
+    e = int(final_epoch)
+    return e - np.mod(e - s, W)
+
+
+def ordered_view(ring, final_epoch):
+    """(W, K) ring -> (epochs ascending, (W, K) rows, valid mask)."""
+    import numpy as np
+    ring = np.asarray(ring)
+    W = ring.shape[0]
+    epochs = ring_epochs(W, final_epoch)
+    order = np.argsort(epochs)
+    return epochs[order], ring[order], epochs[order] >= 0
